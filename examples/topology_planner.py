@@ -1,0 +1,87 @@
+"""Topology planner: given a target NIC count and NIC bandwidth, enumerate
+feasible MPHX(n, p, D_1..D_D) configurations plus Fat-Tree/Dragonfly
+baselines, and rank them by cost/NIC and diameter — the paper's §3/§4
+design procedure as a tool.
+
+Run:  PYTHONPATH=src python examples/topology_planner.py --nics 65536
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (DEFAULT_SWITCH, Dragonfly, MPHX,  # noqa: E402
+                        MultiPlaneFatTree, ThreeTierFatTree, cost_report)
+from repro.core.netsim import zero_load_latency  # noqa: E402
+
+
+def enumerate_mphx(nics: int, nic_bw: float, tolerance: float = 0.12):
+    """All MPHX(n, p, dims) within +-tolerance of the NIC target."""
+    out = []
+    for n in (1, 2, 4, 8):
+        radix = DEFAULT_SWITCH.radix_at(nic_bw / n)
+        for D in (1, 2, 3):
+            # balanced-ish: p = D_i = s
+            import itertools
+            lo = max(2, int((nics / radix) ** (1 / (D + 0.999)) * 0.5))
+            hi = int(nics ** (1 / (D + 1)) * 2) + 2
+            for s in range(lo, hi):
+                for p in range(max(s - 8, 1), s + 9):
+                    if p + D * (s - 1) > radix:
+                        continue
+                    N = p * s**D
+                    if abs(N - nics) / nics > tolerance:
+                        continue
+                    try:
+                        t = MPHX(n=n, p=p, dims=(s,) * D,
+                                 nic_bw_gbps=nic_bw)
+                        t.validate()
+                        out.append(t)
+                    except (ValueError, KeyError):
+                        continue
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nics", type=int, default=65_536)
+    ap.add_argument("--nic-bw-gbps", type=float, default=1600.0)
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+
+    cands = enumerate_mphx(args.nics, args.nic_bw_gbps)
+    baselines = []
+    try:
+        baselines.append(ThreeTierFatTree(nics=args.nics,
+                                          nic_bw_gbps=args.nic_bw_gbps))
+    except ValueError:
+        pass
+    try:
+        baselines.append(MultiPlaneFatTree(n=8, nics=args.nics,
+                                           nic_bw_gbps=args.nic_bw_gbps))
+    except ValueError:
+        pass
+
+    rows = []
+    for t in cands + baselines:
+        try:
+            rep = cost_report(t)
+        except KeyError:
+            continue
+        rows.append((rep.per_nic_usd, t.diameter, t, rep))
+    rows.sort(key=lambda r: (r[0], r[1]))
+
+    print(f"Target: {args.nics:,} NICs @ {args.nic_bw_gbps:.0f} Gbps — "
+          f"{len(cands)} MPHX candidates, best {args.top}:")
+    print(f"{'topology':32s} {'N':>8s} {'d':>2s} {'$/NIC':>8s} "
+          f"{'bisec Tbps':>10s} {'0-load us':>9s}")
+    for cost, dia, t, rep in rows[:args.top]:
+        print(f"{t.name:32s} {t.n_nics:8,d} {dia:2d} {cost:8,.0f} "
+              f"{t.bisection_bw_tbps():10.0f} "
+              f"{zero_load_latency(t) * 1e6:9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""§Perf hillclimb driver: run tagged dry-run variants of the three chosen
+cells and print before/after roofline terms.
+
+Usage: PYTHONPATH=src python scripts/hillclimb.py [cellname ...]
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.launch.roofline import roofline_row  # noqa: E402
+
+# (cell, variant-tag, overrides)
+ROUND2 = {
+    "kimi_train": [
+        ("kimi-k2-1t-a32b", "train_4k", True, "ws2",
+         {"moe_weight_stationary": True}),
+        ("kimi-k2-1t-a32b", "train_4k", True, "ws2_mb4",
+         {"moe_weight_stationary": True, "microbatches": 4}),
+        ("kimi-k2-1t-a32b", "train_4k", True, "mb4", {"microbatches": 4}),
+    ],
+    "mixtral_train": [
+        ("mixtral-8x22b", "train_4k", False, "tpf", {"moe_tp_f": True}),
+        ("mixtral-8x22b", "train_4k", False, "tpf_mb4",
+         {"moe_tp_f": True, "microbatches": 4}),
+    ],
+    "yi_train": [
+        ("yi-9b", "train_4k", False, "dots", {"remat": "dots"}),
+        ("yi-9b", "train_4k", False, "mb16", {"microbatches": 16}),
+        ("yi-9b", "train_4k", False, "dots_mb16",
+         {"remat": "dots", "microbatches": 16}),
+    ],
+}
+
+VARIANTS = {
+    # most representative of the paper's technique (EP all-to-all on the
+    # full-mesh dims) AND most collective-bound
+    "kimi_train": [
+        ("kimi-k2-1t-a32b", "train_4k", True, "base", {}),
+        ("kimi-k2-1t-a32b", "train_4k", True, "ws",
+         {"moe_weight_stationary": True}),
+        ("kimi-k2-1t-a32b", "train_4k", True, "sp",
+         {"sequence_parallel": True}),
+        ("kimi-k2-1t-a32b", "train_4k", True, "ws_sp",
+         {"moe_weight_stationary": True, "sequence_parallel": True}),
+        ("kimi-k2-1t-a32b", "train_4k", True, "ws_sp_mb4",
+         {"moe_weight_stationary": True, "sequence_parallel": True,
+          "microbatches": 4}),
+    ],
+    # worst roofline fraction of the MoE cells (dispatch-mode MoE)
+    "mixtral_train": [
+        ("mixtral-8x22b", "train_4k", False, "base", {}),
+        ("mixtral-8x22b", "train_4k", False, "sp",
+         {"sequence_parallel": True}),
+        ("mixtral-8x22b", "train_4k", False, "sp_mb4",
+         {"sequence_parallel": True, "microbatches": 4}),
+        ("mixtral-8x22b", "train_4k", False, "sp_remat_dots",
+         {"sequence_parallel": True, "remat": "dots"}),
+    ],
+    # dense memory-bound representative
+    "yi_train": [
+        ("yi-9b", "train_4k", False, "base", {}),
+        ("yi-9b", "train_4k", False, "sp", {"sequence_parallel": True}),
+        ("yi-9b", "train_4k", False, "sp_mb4",
+         {"sequence_parallel": True, "microbatches": 4}),
+        ("yi-9b", "train_4k", False, "sp_dots",
+         {"sequence_parallel": True, "remat": "dots"}),
+        ("yi-9b", "train_4k", False, "sp_dots_mb4",
+         {"sequence_parallel": True, "remat": "dots", "microbatches": 4}),
+    ],
+}
+
+
+def main():
+    args = sys.argv[1:]
+    table = ROUND2 if args and args[0] == "--round2" else VARIANTS
+    which = [a for a in args if not a.startswith("--")] or list(table)
+    out = {}
+    for name in which:
+        rows = []
+        for arch, shape, mp, tag, overrides in table[name]:
+            rec = run_cell(arch, shape, mp, tag=f"hc_{tag}", verbose=False,
+                           **overrides)
+            rec["tag"] = tag
+            r = roofline_row(rec)
+            rows.append((tag, r, rec))
+            print(f"[{name}/{tag}] compute={r['compute_s']:.3f}s "
+                  f"memory={r['memory_s']:.3f}s "
+                  f"coll={r['collective_s']:.3f}s bound={r['bound']} "
+                  f"frac={r['roofline_fraction']:.4f} "
+                  f"hbm={r['hbm_gib']:.1f}GiB")
+        out[name] = [(t, {k: r[k] for k in
+                          ("compute_s", "memory_s", "collective_s", "bound",
+                           "roofline_fraction", "hbm_gib")})
+                     for t, r, _ in rows]
+    suffix = "_round2" if table is ROUND2 else ""
+    with open(os.path.join(os.path.dirname(__file__), "..", "results",
+                           f"hillclimb{suffix}.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""llava-next-34b [vlm] — anyres tiling (frontend STUB)
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]:
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+
+The vision tower / anyres tiling is a stub per the assignment:
+``input_specs()`` provides precomputed patch embeddings
+(B, n_image_tokens, d_model); of each shape's seq_len, the first
+n_image_tokens positions are image, the rest text."""
+
+from .base import ModelConfig, VLMConfig
+
+CONFIG = ModelConfig(
+    arch_id="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64_000,
+    vlm=VLMConfig(n_image_tokens=1024),
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        arch_id="llava-next-34b",
+        family="vlm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=512,
+        vlm=VLMConfig(n_image_tokens=8),
+        param_dtype="float32",
+        activation_dtype="float32",
+    )

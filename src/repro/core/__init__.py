@@ -1,0 +1,23 @@
+"""repro.core — the paper's contribution: Multi-Plane HyperX topology,
+cost model, routing, flow-level simulation, plane spraying, and the
+JAX-side realization (plane-decomposed collectives + mesh mapping)."""
+
+from .topology import LinkClass, SwitchGraph, SwitchModel, Topology, DEFAULT_SWITCH
+from .hyperx import MPHX, flattened_butterfly, table2_mphx_rows
+from .fattree import MultiPlaneFatTree, ThreeTierFatTree
+from .dragonfly import Dragonfly, DragonflyPlus, frontier_flattening_example
+from .cost import (CostModel, CostReport, DEFAULT_COST, PAPER_TABLE2,
+                   cost_report, table2, table2_topologies)
+from .planes import SprayConfig, split_chunks, spray_completion_time
+from . import netsim, routing
+
+__all__ = [
+    "LinkClass", "SwitchGraph", "SwitchModel", "Topology", "DEFAULT_SWITCH",
+    "MPHX", "flattened_butterfly", "table2_mphx_rows",
+    "MultiPlaneFatTree", "ThreeTierFatTree",
+    "Dragonfly", "DragonflyPlus", "frontier_flattening_example",
+    "CostModel", "CostReport", "DEFAULT_COST", "PAPER_TABLE2",
+    "cost_report", "table2", "table2_topologies",
+    "SprayConfig", "split_chunks", "spray_completion_time",
+    "netsim", "routing",
+]

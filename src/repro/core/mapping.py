@@ -1,0 +1,173 @@
+"""Logical mesh -> physical MPHX placement (DESIGN.md §3.2).
+
+A training job's logical mesh ("pod", "data", "model") produces distinct
+collective traffic per axis (model: per-layer all-reduce/all-gather of
+activations + EP all-to-all; data: per-step gradient all-reduce; pod: DCN
+gradient all-reduce).  The physical MPHX(n, p, D_1..D_D) fabric offers
+hop-count/bandwidth trade-offs per dimension: NICs under one switch (p-way,
+2 hops), dimension i's full mesh (D_i-way, 3 hops, link multiplicity
+links_i/(D_i-1)).
+
+:func:`best_mapping` enumerates assignments of logical axes onto the
+physical hierarchy levels and scores them with the netsim alpha-beta model
+weighted by each axis's bytes-per-step, reproducing the paper's guidance
+(§5.2): bandwidth-hungry axes belong on the p-way switch level or a trunked
+dimension; the latency-sensitive small-collective axes tolerate the sparse
+inter-dimension links.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+
+from .hyperx import MPHX
+from .netsim import DEFAULT_NET, NetParams, gbps_to_Bps, _alpha
+
+
+@dataclass(frozen=True)
+class AxisTraffic:
+    """Bytes each device moves per train step for one logical axis."""
+
+    name: str
+    size: int                    # axis length (devices)
+    allreduce_bytes: float = 0.0  # per step (e.g. grads for data axis)
+    allgather_bytes: float = 0.0  # per step (e.g. ZeRO params / TP acts)
+    alltoall_bytes: float = 0.0   # per step (EP dispatch)
+    calls: int = 1                # collectives issued per step (alpha count)
+
+
+@dataclass(frozen=True)
+class Level:
+    """One level of the MPHX physical hierarchy."""
+
+    kind: str                    # "switch" | "dim"
+    size: int                    # fanout of the level
+    hops: float                  # NIC-to-NIC hops within the level
+    rel_bandwidth: float         # per-endpoint-pair bandwidth multiplier
+
+
+def mphx_levels(topo: MPHX) -> list[Level]:
+    levels = [Level("switch", topo.p, 2.0, 1.0)]
+    for d, l in zip(topo.dims, topo.links_per_dim):
+        if d <= 1:
+            continue
+        mult = l / (d - 1)
+        # per-plane pairwise trunk / port bandwidth, all planes sprayed
+        levels.append(Level("dim", d, 3.0, mult))
+    return levels
+
+
+def axis_time_on_level(ax: AxisTraffic, lvl: Level, topo: MPHX,
+                       net: NetParams = DEFAULT_NET) -> float:
+    """alpha-beta time for one axis's per-step traffic on one level."""
+    B = gbps_to_Bps(topo.nic_bw_gbps)
+    t = 0.0
+    m = ax.size
+    if ax.allreduce_bytes:
+        steps = 2 * (m - 1)
+        t += ax.calls * steps * _alpha(topo, lvl.hops, net)
+        t += 2 * (m - 1) / m * ax.allreduce_bytes / B
+    if ax.allgather_bytes:
+        steps = m - 1
+        t += ax.calls * steps * _alpha(topo, lvl.hops, net)
+        t += (m - 1) / m * ax.allgather_bytes / B
+    if ax.alltoall_bytes:
+        t += ax.calls * _alpha(topo, lvl.hops, net)
+        # direct exchange rides the level's pairwise trunks; the full mesh
+        # of a HyperX dim serves A2A at full injection (rel_bandwidth >= 1)
+        t += ax.alltoall_bytes / (B * min(lvl.rel_bandwidth * lvl.size /
+                                          max(m - 1, 1), 1.0))
+    return t
+
+
+@dataclass
+class Mapping:
+    assignment: dict             # axis name -> list of (level index, factor)
+    time_s: float
+    detail: dict = field(default_factory=dict)
+
+
+def _factorizations(size: int, capacities: list[int]):
+    """Yield ways to split `size` across levels (factor per level, product
+    == size, each factor <= capacity)."""
+    if size == 1:
+        yield [1] * len(capacities)
+        return
+    if not capacities:
+        return
+    cap = capacities[0]
+    f = 1
+    while f <= min(size, cap):
+        if size % f == 0:
+            for rest in _factorizations(size // f, capacities[1:]):
+                yield [f] + rest
+        f += 1
+
+
+def best_mapping(topo: MPHX, axes: list[AxisTraffic],
+                 net: NetParams = DEFAULT_NET) -> Mapping:
+    """Assign each logical axis to physical levels minimizing summed
+    collective time.  Axes are placed greedily from most traffic to least,
+    consuming level capacity; within an axis we try all factorizations."""
+    levels = mphx_levels(topo)
+    caps = [l.size for l in levels]
+    order = sorted(axes, key=lambda a: -(a.allreduce_bytes
+                                         + a.allgather_bytes
+                                         + a.alltoall_bytes))
+    assignment, detail = {}, {}
+    total = 0.0
+    for ax in order:
+        best = None
+        for fac in _factorizations(ax.size, caps):
+            # axis spans the levels where factor > 1; time = worst level
+            # (phases run sequentially; use sum over levels with >1 factor)
+            t = 0.0
+            for f, lvl in zip(fac, levels):
+                if f > 1:
+                    sub = AxisTraffic(ax.name, f, ax.allreduce_bytes,
+                                      ax.allgather_bytes, ax.alltoall_bytes,
+                                      ax.calls)
+                    t += axis_time_on_level(sub, lvl, topo, net)
+            if best is None or t < best[0]:
+                best = (t, fac)
+        if best is None:
+            raise ValueError(
+                f"axis {ax.name} (size {ax.size}) does not fit on {topo.name}"
+                f" remaining capacity {caps}")
+        t, fac = best
+        total += t
+        assignment[ax.name] = [(i, f) for i, f in enumerate(fac) if f > 1]
+        detail[ax.name] = t
+        caps = [c // f for c, f in zip(caps, fac)]
+    return Mapping(assignment, total, detail)
+
+
+def traffic_from_model(param_bytes: float, act_bytes_per_layer: float,
+                       n_layers: int, ep_bytes: float,
+                       mesh_shape: dict) -> list[AxisTraffic]:
+    """Build per-axis traffic records from model-level quantities.
+
+    * data axis: one gradient all-reduce of param_bytes (ZeRO: RS+AG, same
+      bytes) + ZeRO param all-gathers (param_bytes per step).
+    * model axis: 2 activation all-gathers + 2 reduce-scatters per layer
+      (Megatron sequence-parallel accounting: ~4 x act bytes per layer) and
+      the EP all-to-all.
+    * pod axis: cross-pod gradient all-reduce of param_bytes.
+    """
+    axes = []
+    if mesh_shape.get("model", 1) > 1:
+        axes.append(AxisTraffic(
+            "model", mesh_shape["model"],
+            allgather_bytes=4 * act_bytes_per_layer * n_layers,
+            alltoall_bytes=ep_bytes, calls=4 * n_layers))
+    if mesh_shape.get("data", 1) > 1:
+        axes.append(AxisTraffic(
+            "data", mesh_shape["data"],
+            allreduce_bytes=param_bytes,
+            allgather_bytes=param_bytes, calls=2 * n_layers))
+    if mesh_shape.get("pod", 1) > 1:
+        axes.append(AxisTraffic(
+            "pod", mesh_shape["pod"], allreduce_bytes=param_bytes, calls=1))
+    return axes

@@ -1,0 +1,268 @@
+"""Flow-level (alpha-beta) network simulator for topology comparison.
+
+The paper defers performance evaluation to future work (§6): "a comprehensive
+performance evaluation comparing it against topologies such as Dragonfly,
+Dragonfly+, multi-plane Fat-Tree ... under synthetic traffic, as well as HPC
+and AI application workloads.  We anticipate demonstrating the low-latency
+advantages of MPHX stemming from its reduced network diameter."  This module
+builds that evaluation:
+
+* zero-load latency  = hops * t_hop + serialization + propagation
+* uniform throughput = closed-form bisection / channel-load bound
+* adversarial throughput = via :mod:`routing` link-load accounting (MPHX)
+* collective completion times (all-reduce / all-gather / reduce-scatter /
+  all-to-all) with plane spraying — latency term counts *hops* so MPHX's
+  smaller diameter shows up directly, bandwidth term counts bottleneck bytes.
+
+All times are seconds, sizes bytes, bandwidths Gbps unless noted.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from .hyperx import MPHX
+from .topology import Topology
+
+
+@dataclass(frozen=True)
+class NetParams:
+    """Per-hop and per-endpoint overheads (flow-level constants)."""
+
+    t_switch: float = 300e-9        # per-switch-hop latency (pipeline+SerDes)
+    t_nic: float = 600e-9           # endpoint injection/ejection overhead
+    t_prop_per_hop: float = 50e-9   # ~10m optics per hop
+    software_alpha: float = 1.5e-6  # per collective step software overhead
+
+
+DEFAULT_NET = NetParams()
+
+
+def gbps_to_Bps(gbps: float) -> float:
+    return gbps * 1e9 / 8.0
+
+
+# ----------------------------------------------------------------------------
+# Point-to-point
+# ----------------------------------------------------------------------------
+
+
+def zero_load_latency(topo: Topology, msg_bytes: float = 4096,
+                      net: NetParams = DEFAULT_NET, spray: bool = True) -> float:
+    """Worst-case (diameter) small-message latency.
+
+    With plane spraying the message is split across the n planes, so
+    serialization uses the FULL NIC bandwidth B even though each plane's port
+    runs at B/n — the multi-plane latency benefit (§2) comes from the smaller
+    hop count, the bandwidth is unchanged.
+    """
+    hops = topo.diameter
+    sw_hops = hops - 2
+    bw = topo.nic_bw_gbps if spray else topo.port_gbps
+    ser = msg_bytes / gbps_to_Bps(bw)
+    return (net.t_nic + sw_hops * net.t_switch + hops * net.t_prop_per_hop + ser)
+
+
+def avg_latency(topo: Topology, msg_bytes: float = 4096,
+                net: NetParams = DEFAULT_NET) -> float:
+    hops = topo.avg_hops()
+    sw_hops = max(hops - 2.0, 0.0)
+    ser = msg_bytes / gbps_to_Bps(topo.nic_bw_gbps)
+    return net.t_nic + sw_hops * net.t_switch + hops * net.t_prop_per_hop + ser
+
+
+# ----------------------------------------------------------------------------
+# Synthetic-traffic throughput (closed forms)
+# ----------------------------------------------------------------------------
+
+
+def uniform_throughput_fraction(topo: Topology) -> float:
+    """Sustainable fraction of injection bandwidth under uniform random
+    traffic, bisection-bound: half the traffic crosses the bisection."""
+    inj = topo.n_nics * topo.nic_bw_gbps  # total injection
+    cross = inj / 2.0
+    cap = 2.0 * topo.bisection_links() * topo.port_gbps  # full duplex
+    return min(1.0, cap / cross)
+
+
+def adversarial_throughput_fraction(topo: Topology, mode: str = "minimal",
+                                    dim: int = 0) -> float:
+    """Neighbor-shift adversarial pattern (MPHX only — the §5.2 scenario)."""
+    if not isinstance(topo, MPHX):
+        raise TypeError("adversarial model implemented for MPHX")
+    from .routing import HyperXRouter, neighbor_shift_traffic
+
+    offered = topo.nic_bw_gbps
+    router = HyperXRouter(topo)
+    ll = router.route(neighbor_shift_traffic(topo, offered, dim), mode=mode)
+    return ll.saturation_throughput(offered)
+
+
+# ----------------------------------------------------------------------------
+# Collectives
+# ----------------------------------------------------------------------------
+
+
+@dataclass
+class CollectiveEstimate:
+    kind: str
+    algo: str
+    bytes_per_nic: float
+    steps: int
+    hops_per_step: float
+    latency_s: float          # alpha terms
+    bandwidth_s: float        # beta  terms
+
+    @property
+    def total_s(self) -> float:
+        return self.latency_s + self.bandwidth_s
+
+    def row(self) -> dict:
+        return {
+            "kind": self.kind, "algo": self.algo,
+            "bytes_per_nic": int(self.bytes_per_nic),
+            "steps": self.steps,
+            "latency_us": round(self.latency_s * 1e6, 2),
+            "bandwidth_us": round(self.bandwidth_s * 1e6, 2),
+            "total_us": round(self.total_s * 1e6, 2),
+        }
+
+
+def _alpha(topo: Topology, hops: float, net: NetParams) -> float:
+    sw_hops = max(hops - 2.0, 0.0)
+    return (net.software_alpha + net.t_nic + sw_hops * net.t_switch
+            + hops * net.t_prop_per_hop)
+
+
+def ring_allreduce_time(topo: Topology, bytes_per_nic: float, m: int | None = None,
+                        net: NetParams = DEFAULT_NET) -> CollectiveEstimate:
+    """Classic ring all-reduce over m endpoints: 2(m-1) steps of size S/m.
+
+    Ring neighbours are placed adjacently, so each step traverses the
+    topology's *minimum* NIC-NIC distance (3 hops on any of these nets:
+    NIC->sw->sw->NIC, or 2 if same switch).  Bandwidth term uses the full NIC
+    bandwidth (all planes sprayed).
+    """
+    m = m or topo.n_nics
+    steps = 2 * (m - 1)
+    chunk = bytes_per_nic / m
+    # consecutive ring ranks share a switch p-at-a-time
+    same_switch = getattr(topo, "p", 1)
+    hops = 2.0 if same_switch > 1 else 3.0
+    lat = steps * _alpha(topo, hops, net)
+    bw = steps * chunk / gbps_to_Bps(topo.nic_bw_gbps)
+    return CollectiveEstimate("all_reduce", "ring", bytes_per_nic, steps, hops,
+                              lat, bw)
+
+
+def hierarchical_allreduce_time(topo: MPHX, bytes_per_nic: float,
+                                net: NetParams = DEFAULT_NET
+                                ) -> CollectiveEstimate:
+    """MPHX-native hierarchical all-reduce (the paper-technique schedule):
+
+      stage 0: reduce-scatter among the p NICs of each switch (2 hops/step)
+      stage i: all-reduce across dimension i (full mesh -> one-step
+               direct exchange per dim, a 'butterfly over the mesh')
+      stage 0': all-gather among the p NICs of each switch
+
+    Every plane carries 1/n of the bytes concurrently (plane spraying).
+    """
+    p = topo.p
+    lat = 0.0
+    bw = 0.0
+    steps = 0
+    # stage 0: RS over p endpoints via their shared switch, ring of p
+    if p > 1:
+        s = (p - 1)
+        steps += 2 * s  # RS now + AG at the end
+        lat += 2 * s * _alpha(topo, 2.0, net)
+        bw += 2 * s * (bytes_per_nic / p) / gbps_to_Bps(topo.nic_bw_gbps)
+    shard = bytes_per_nic / max(p, 1)
+    # dimension stages: all-to-all exchange within the full mesh (1 switch hop)
+    for d in topo.dims:
+        if d <= 1:
+            continue
+        # reduce-scatter + all-gather across d peers, direct mesh: 2 steps
+        # each moving shard*(d-1)/d bytes
+        steps += 2
+        lat += 2 * _alpha(topo, 3.0, net)
+        bw += 2 * shard * (d - 1) / d / gbps_to_Bps(topo.nic_bw_gbps)
+        shard = shard / d
+    return CollectiveEstimate("all_reduce", "mphx-hierarchical", bytes_per_nic,
+                              steps, 3.0, lat, bw)
+
+
+def hd_allreduce_time(topo: Topology, bytes_per_nic: float,
+                      m: int | None = None,
+                      net: NetParams = DEFAULT_NET) -> CollectiveEstimate:
+    """Recursive halving-doubling all-reduce: 2*log2(m) steps.
+
+    Step k exchanges with a peer 2^k ranks away, so early steps stay local and
+    late steps traverse up to the topology diameter; we charge the average of
+    min-distance and diameter per step (exact distances depend on placement).
+    """
+    m = m or topo.n_nics
+    k = max(1, math.ceil(math.log2(m)))
+    steps = 2 * k
+    hops = (3.0 + float(topo.diameter)) / 2.0
+    lat = steps * _alpha(topo, hops, net)
+    bw = 2.0 * (m - 1) / m * bytes_per_nic / gbps_to_Bps(topo.nic_bw_gbps)
+    return CollectiveEstimate("all_reduce", "halving-doubling", bytes_per_nic,
+                              steps, hops, lat, bw)
+
+
+def alltoall_time(topo: Topology, bytes_per_nic: float,
+                  net: NetParams = DEFAULT_NET) -> CollectiveEstimate:
+    """All-to-all of S bytes per NIC (total), uniform: bisection-bound."""
+    frac = uniform_throughput_fraction(topo)
+    eff = gbps_to_Bps(topo.nic_bw_gbps) * frac
+    lat = _alpha(topo, float(topo.diameter), net)
+    return CollectiveEstimate("all_to_all", "direct", bytes_per_nic, 1,
+                              float(topo.diameter), lat, bytes_per_nic / eff)
+
+
+def allgather_time(topo: Topology, bytes_per_nic: float, m: int | None = None,
+                   net: NetParams = DEFAULT_NET) -> CollectiveEstimate:
+    m = m or topo.n_nics
+    steps = m - 1
+    hops = 3.0
+    lat = steps * _alpha(topo, hops, net)
+    bw = steps * (bytes_per_nic) / gbps_to_Bps(topo.nic_bw_gbps)
+    return CollectiveEstimate("all_gather", "ring", bytes_per_nic, steps, hops,
+                              lat, bw)
+
+
+def allreduce_time(topo: Topology, bytes_per_nic: float,
+                   net: NetParams = DEFAULT_NET) -> CollectiveEstimate:
+    """Best available all-reduce schedule for the topology."""
+    cands = [ring_allreduce_time(topo, bytes_per_nic, net=net),
+             hd_allreduce_time(topo, bytes_per_nic, net=net)]
+    if isinstance(topo, MPHX):
+        cands.append(hierarchical_allreduce_time(topo, bytes_per_nic, net))
+    return min(cands, key=lambda c: c.total_s)
+
+
+# ----------------------------------------------------------------------------
+# Cross-topology comparison report (benchmarks/bench_netsim_traffic.py)
+# ----------------------------------------------------------------------------
+
+
+def compare_topologies(topos: list[Topology], msg_bytes: float = 4096,
+                       collective_mb: float = 256.0,
+                       net: NetParams = DEFAULT_NET) -> list[dict]:
+    rows = []
+    for t in topos:
+        ar = allreduce_time(t, collective_mb * 2**20, net)
+        rows.append({
+            "topology": t.name,
+            "diameter": t.diameter,
+            "avg_hops": round(t.avg_hops(), 2),
+            "zero_load_us": round(zero_load_latency(t, msg_bytes, net) * 1e6, 3),
+            "avg_latency_us": round(avg_latency(t, msg_bytes, net) * 1e6, 3),
+            "uniform_thpt": round(uniform_throughput_fraction(t), 3),
+            f"allreduce_{int(collective_mb)}MB_ms":
+                round(ar.total_s * 1e3, 3),
+            "allreduce_algo": ar.algo,
+        })
+    return rows

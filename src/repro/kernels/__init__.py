@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper), ref.py (pure-jnp oracle).  All validated in
+interpret=True mode on CPU (tests/test_kernels.py); pass interpret=False
+on real TPU.  The dry-run / cost-analysis paths use the jnp reference
+implementations so HLO FLOP counts stay visible (DESIGN.md §6).
+"""

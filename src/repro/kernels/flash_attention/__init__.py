@@ -1,0 +1,6 @@
+from .kernel import flash_attention
+from .ops import flash_attention_kernel_layout, flash_attention_model_layout
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_kernel_layout",
+           "flash_attention_model_layout", "attention_ref"]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout (kernel-native): q (B, H, Sq, Dh); k, v (B, K, Skv, Dh) with GQA
+grouping G = H // K (query head h reads kv head h // G).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None) -> jnp.ndarray:
+    B, H, Sq, Dh = q.shape
+    K = k.shape[1]
+    G = H // K
+    scale = 1.0 / math.sqrt(Dh)
+    kk = jnp.repeat(k, G, axis=1)          # (B, H, Skv, Dh)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    Skv = k.shape[2]
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # right-aligned (decode ok)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,7 @@
+from .kernel import grouped_matmul, ragged_grouped_matmul
+from .ops import expert_ffn_matmul, megablocks_matmul
+from .ref import grouped_matmul_ref, ragged_grouped_matmul_ref
+
+__all__ = ["grouped_matmul", "ragged_grouped_matmul", "expert_ffn_matmul",
+           "megablocks_matmul", "grouped_matmul_ref",
+           "ragged_grouped_matmul_ref"]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the grouped (per-expert) matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x, w):
+    """x: (E, M, K); w: (E, K, N) -> (E, M, N) per-group matmul."""
+    return jnp.einsum("emk,ekn->emn", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ragged_grouped_matmul_ref(x, w, group_sizes):
+    """MegaBlocks-style ragged: x (T, K) rows sorted by group; w (E, K, N);
+    group_sizes (E,) with sum == T.  Returns (T, N)."""
+    import numpy as np
+    T = x.shape[0]
+    out = jnp.zeros((T, w.shape[2]), jnp.float32)
+    start = 0
+    for e, size in enumerate(np.asarray(group_sizes)):
+        if size:
+            out = out.at[start:start + size].set(
+                x[start:start + size].astype(jnp.float32) @
+                w[e].astype(jnp.float32))
+        start += size
+    return out.astype(x.dtype)

@@ -1,0 +1,5 @@
+from .kernel import lru_scan
+from .ops import rg_lru_pallas
+from .ref import lru_scan_ref
+
+__all__ = ["lru_scan", "rg_lru_pallas", "lru_scan_ref"]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel: sequential linear recurrence
+h_t = a_t * h_{t-1} + b_t over time."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def lru_scan_ref(a, b, h0=None):
+    """a, b: (B, S, W) float32 -> (y (B,S,W), h_last (B,W))."""
+    B, S, W = a.shape
+    h = h0 if h0 is not None else jnp.zeros((B, W), jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h, ys = lax.scan(step, h, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h

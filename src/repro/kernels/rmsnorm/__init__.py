@@ -1,0 +1,5 @@
+from .kernel import rmsnorm
+from .ops import rmsnorm_model_layout
+from .ref import rmsnorm_ref
+
+__all__ = ["rmsnorm", "rmsnorm_model_layout", "rmsnorm_ref"]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    """x: (N, D); scale: (D,) -> (N, D), fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) *
+            scale.astype(jnp.float32)).astype(x.dtype)

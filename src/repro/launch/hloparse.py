@@ -1,0 +1,512 @@
+"""Scan-aware HLO accounting for the roofline (§Roofline).
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — a
+scan-over-layers program therefore underreports FLOPs/bytes/collectives by
+~L x (verified empirically; see EXPERIMENTS.md §Dry-run notes).  This
+module parses the POST-PARTITIONING HLO text, reconstructs the computation
+call graph (while bodies with their trip counts, fusions, calls), and
+expands totals properly:
+
+* ``flops``            — 2*prod(out)*prod(contracting) per dot, everywhere
+* ``hbm_bytes``        — operand+output bytes of non-fused instructions
+                         (fusion call sites count as one kernel's traffic)
+* ``collectives``      — per-kind wire bytes with replica-group sizes
+
+All shapes in partitioned HLO are per-device, so totals are per-device.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+               "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+               "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+               "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+|[\w\.\-]+)\s*=\s*(\(?[^=]*?)\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*(?:\([^)]*\))?\s*"
+                          r"(?:->\s*[^{]*)?\{\s*$")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_dims(type_str: str):
+    """All (dtype, [dims]) arrays in a type string (handles tuples)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(n * DTYPE_BYTES[dt] for dt, n in _shape_dims(type_str))
+
+
+def _shape_elems(type_str: str) -> int:
+    return sum(n for _, n in _shape_dims(type_str))
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str                      # everything after the opening paren
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # %name -> type string
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, Computation] = {}
+        self.fusion_called: set[str] = set()
+        self.entry: str | None = None
+        self._parse(text)
+
+    @staticmethod
+    def _norm(name: str) -> str:
+        return name if name.startswith("%") else "%" + name
+
+    def _parse(self, text: str):
+        cur: Computation | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if not s or s.startswith("//"):
+                continue
+            if cur is None:
+                # computation headers end with '{' and carry a signature,
+                # e.g.  %region_0.2 (arg: (s32[], f32[64,64])) -> (...) {
+                #       ENTRY %main.29 (Arg_0.1: f32[64,64]) -> f32[64,64] {
+                if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+                    toks = s.split()
+                    if s.startswith("ENTRY") and len(toks) > 1:
+                        name = toks[1].split("(")[0]
+                    else:
+                        name = toks[0].split("(")[0]
+                    if not name:
+                        continue
+                    name = self._norm(name)
+                    cur = Computation(name)
+                    if s.startswith("ENTRY"):
+                        self.entry = name
+                continue
+            if s == "}" or s.startswith("}"):
+                self.computations[cur.name] = cur
+                cur = None
+                continue
+            if " = " not in s:
+                continue
+            name, _, rhs = s.partition(" = ")
+            name = name.replace("ROOT ", "").strip()
+            if not re.match(r"^%?[\w\.\-]+$", name):
+                continue
+            # op = first `word(` in the rhs; the type prefix may contain
+            # tuple parens and /*index=N*/ comments but never `word(`
+            mo = re.search(r"([\w\-]+)\(", rhs)
+            if not mo:
+                continue
+            type_str, op, rest = rhs[:mo.start()], mo.group(1), rhs[mo.end():]
+            name = self._norm(name)
+            inst = Instr(name, type_str.strip(), op, rest, s)
+            cur.instrs.append(inst)
+            cur.shapes[name] = type_str.strip()
+            if op == "fusion" or "calls=" in rest:
+                mm = re.search(r"calls=(%?[\w\.\-]+)", rest)
+                if mm:
+                    self.fusion_called.add(self._norm(mm.group(1)))
+            for mm in re.finditer(r"to_apply=(%?[\w\.\-]+)", rest):
+                self.fusion_called.add(self._norm(mm.group(1)))
+        if cur is not None:
+            self.computations[cur.name] = cur
+        if self.entry is None and self.computations:
+            # ENTRY line may carry the computation name differently; pick
+            # the one never referenced by others.
+            referenced = set()
+            for c in self.computations.values():
+                for i in c.instrs:
+                    for mm in re.finditer(r"(?:condition|body|calls|"
+                                          r"to_apply)=(%?[\w\.\-]+)", i.rest):
+                        referenced.add(self._norm(mm.group(1)))
+            cands = [n for n in self.computations if n not in referenced]
+            self.entry = cands[-1] if cands else next(iter(self.computations))
+
+    # ------------------------------------------------------- trip counts ----
+
+    def while_trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        consts: dict[str, int] = {}
+        for i in comp.instrs:
+            if i.op == "constant":
+                mm = re.match(r"([\d\-]+)\)?", i.rest)
+                if mm:
+                    try:
+                        consts[i.name] = int(mm.group(1))
+                    except ValueError:
+                        pass
+        for i in comp.instrs:
+            if i.op == "compare":
+                ops = re.findall(r"%[\w\.\-]+", i.rest.split(")")[0])
+                for o in ops:
+                    if o in consts:
+                        return max(1, abs(consts[o]))
+        if consts:
+            return max(1, max(abs(v) for v in consts.values()))
+        return 1
+
+    # ---------------------------------------------------------- walkers ----
+
+    def _children(self, comp: Computation):
+        """Yield (child_name, multiplier, kind)."""
+        for i in comp.instrs:
+            if i.op == "while":
+                mb = re.search(r"body=(%?[\w\.\-]+)", i.rest)
+                mc = re.search(r"condition=(%?[\w\.\-]+)", i.rest)
+                if mb:
+                    # XLA records the trip count when it can prove it
+                    mt = re.search(r'known_trip_count[^}]*"n":"(\d+)"',
+                                   i.rest)
+                    if mt:
+                        trip = max(1, int(mt.group(1)))
+                    elif mc:
+                        trip = self.while_trip_count(self._norm(mc.group(1)))
+                    else:
+                        trip = 1
+                    yield self._norm(mb.group(1)), trip, "while"
+            elif i.op == "conditional":
+                for mm in re.finditer(r"(%?[\w\.\-]+)", i.rest):
+                    pass
+                for mm in re.finditer(
+                        r"(?:true_computation|false_computation|"
+                        r"branch_computations=\{)([^,}]*)", i.rest):
+                    for nm in re.findall(r"%?[\w\.\-]+", mm.group(1)):
+                        yield self._norm(nm), 1, "cond"
+            elif i.op == "call":
+                mm = re.search(r"to_apply=(%?[\w\.\-]+)", i.rest)
+                if mm:
+                    yield self._norm(mm.group(1)), 1, "call"
+            elif i.op == "fusion":
+                mm = re.search(r"calls=(%?[\w\.\-]+)", i.rest)
+                if mm:
+                    yield self._norm(mm.group(1)), 1, "fusion"
+
+    def _expand(self, fn, include_fusion_bodies: bool,
+                _memo=None, comp_name=None) -> float:
+        """Sum fn(comp) over the call tree with while-trip multipliers."""
+        if _memo is None:
+            _memo = {}
+        comp_name = comp_name or self.entry
+        if comp_name in _memo:
+            return _memo[comp_name]
+        comp = self.computations.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = fn(comp)
+        for child, mult, kind in self._children(comp):
+            if kind == "fusion" and not include_fusion_bodies:
+                continue
+            total += mult * self._expand(fn, include_fusion_bodies, _memo,
+                                         child)
+        _memo[comp_name] = total
+        return total
+
+    # ------------------------------------------------------------ flops ----
+
+    def _dot_flops(self, comp: Computation) -> float:
+        total = 0.0
+        for i in comp.instrs:
+            if i.op not in ("dot", "convolution"):
+                continue
+            out_elems = _shape_elems(i.type_str)
+            if i.op == "dot":
+                mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", i.rest)
+                lhs_name = None
+                args = re.findall(r"%[\w\.\-]+", i.rest.split(")")[0])
+                if args:
+                    lhs_name = args[0]
+                k = 1
+                if mm and lhs_name and lhs_name in comp.shapes:
+                    dims_str = _SHAPE_RE.search(comp.shapes[lhs_name])
+                    if dims_str:
+                        dims = [int(d) for d in dims_str.group(2).split(",")
+                                if d]
+                        for ci in mm.group(1).split(","):
+                            if ci != "" and int(ci) < len(dims):
+                                k *= dims[int(ci)]
+                total += 2.0 * out_elems * k
+            else:  # convolution: 2 * out_elems * prod(kernel spatial+in)
+                args = re.findall(r"%[\w\.\-]+", i.rest.split(")")[0])
+                k = 1
+                if len(args) >= 2 and args[1] in comp.shapes:
+                    dims_str = _SHAPE_RE.search(comp.shapes[args[1]])
+                    if dims_str:
+                        dims = [int(d) for d in dims_str.group(2).split(",")
+                                if d]
+                        k = max(1, math.prod(dims) // max(dims[-1], 1))
+                total += 2.0 * out_elems * k
+        return total
+
+    def total_flops(self) -> float:
+        return self._expand(self._dot_flops, include_fusion_bodies=True)
+
+    # ------------------------------------------------------------ bytes ----
+
+    _SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                       "bitcast", "while", "conditional", "call",
+                       "after-all", "partition-id", "replica-id", "iota",
+                       "get-dimension-size", "broadcast", "reshape",
+                       # dtype converts are CPU bf16-legalization artifacts;
+                       # on the TPU target they fuse into neighbours
+                       "convert"}
+
+    # ops that touch only a slice of their big operand: charge slice-sized
+    # traffic, NOT the full operand (a scan reading its stacked xs does a
+    # dynamic-slice of the (L, ...) stack per iteration — charging the full
+    # stack would overcount HBM by L x).
+    _SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+    _UPDATE_OPS = {"dynamic-update-slice", "scatter", "scatter-add"}
+
+    @staticmethod
+    def _operands(instr: Instr) -> list[str]:
+        return re.findall(r"%[\w\.\-]+", instr.rest.split(")")[0])
+
+    def _fusion_call_bytes(self, comp: Computation, instr: Instr) -> float:
+        """HBM traffic of one fused kernel, slice/alias aware.
+
+        * a call-site operand whose in-fusion consumers are ALL slice ops
+          contributes only the slice bytes (a scan body dynamic-slicing its
+          stacked (L, ...) xs must NOT be charged the whole stack);
+        * if the fusion root is a dynamic-update-slice, the output buffer is
+          aliased in place: charge the update region, not the full buffer.
+        """
+        m = re.search(r"calls=(%?[\w\.\-]+)", instr.rest)
+        fc = self.computations.get(self._norm(m.group(1))) if m else None
+        ops = self._operands(instr)
+        if fc is None:
+            return _shape_bytes(instr.type_str) + sum(
+                _shape_bytes(comp.shapes.get(o, "")) for o in ops)
+        param_name = {}
+        for i2 in fc.instrs:
+            if i2.op == "parameter":
+                mm = re.match(r"(\d+)", i2.rest)
+                if mm:
+                    param_name[int(mm.group(1))] = i2.name
+
+        # dtype converts / bitcasts / copies are transparent: XLA:CPU
+        # legalizes bf16 by round-tripping through f32 (real TPU programs
+        # keep bf16), so we trace through them both forwards (consumers)
+        # and backwards (alias detection).
+        TRANSPARENT = {"convert", "bitcast", "copy", "reshape"}
+
+        def trace_back(name: str) -> str:
+            seen = 0
+            while seen < 16:
+                producer = next((i2 for i2 in fc.instrs if i2.name == name),
+                                None)
+                if producer is None or producer.op not in TRANSPARENT:
+                    return name
+                srcs = self._operands(producer)
+                if not srcs:
+                    return name
+                name = srcs[0]
+                seen += 1
+            return name
+
+        def effective_consumers(name: str, depth=0) -> list:
+            out = []
+            if depth > 8:
+                return out
+            for i2 in fc.instrs:
+                if i2.op == "parameter" or name not in self._operands(i2):
+                    continue
+                if i2.op in TRANSPARENT:
+                    out.extend(effective_consumers(i2.name, depth + 1))
+                else:
+                    out.append(i2)
+            return out
+
+        # real root: walk back through convert/bitcast/copy wrappers
+        root = fc.instrs[-1] if fc.instrs else None
+        hops = 0
+        while (root is not None and root.op in TRANSPARENT and hops < 8):
+            srcs = self._operands(root)
+            root = next((i2 for i2 in fc.instrs
+                         if srcs and i2.name == srcs[0]), None)
+            hops += 1
+        root_is_dus = root is not None and root.op == "dynamic-update-slice"
+        aliased = set()
+        if root_is_dus:
+            rops = self._operands(root)
+            if rops:
+                aliased.add(trace_back(rops[0]))   # in-place buffer
+
+        total = 0.0
+        for idx, opname in enumerate(ops):
+            full = _shape_bytes(comp.shapes.get(opname, ""))
+            pname = param_name.get(idx)
+            if pname is None:
+                total += full
+                continue
+            if pname in aliased:
+                continue                         # counted via root update
+            consumers = effective_consumers(pname)
+            charged, needs_full = 0.0, not consumers
+            for c in consumers:
+                if c.op in self._SLICE_OPS:
+                    charged += _shape_bytes(c.type_str)
+                elif (c.op == "dynamic-update-slice" and
+                      trace_back(self._operands(c)[0]) == pname):
+                    pass    # in-place buffer of a non-root DUS: update
+                            # region is charged by that DUS's own output
+                else:
+                    needs_full = True
+                    break
+            total += full if needs_full else charged
+        if root_is_dus:
+            rops = self._operands(root)
+            upd = _shape_bytes(fc.shapes.get(rops[1], "")) \
+                if len(rops) > 1 else 0.0
+            total += 2.0 * upd                   # read-modify-write region
+        else:
+            total += _shape_bytes(instr.type_str)
+        return total
+
+    def _hbm_bytes(self, comp: Computation) -> float:
+        if comp.name in self.fusion_called:
+            return 0.0  # in-register inside a fused kernel
+        total = 0.0
+        for i in comp.instrs:
+            if i.op in self._SKIP_BYTES_OPS:
+                continue
+            out_bytes = _shape_bytes(i.type_str)
+            if i.op == "fusion":
+                total += self._fusion_call_bytes(comp, i)
+                continue
+            if i.op in self._SLICE_OPS:
+                total += 2.0 * out_bytes        # read slice + write result
+                continue
+            if i.op in self._UPDATE_OPS:
+                # read-modify-write of the updated region (operand 1)
+                ops = self._operands(i)
+                upd = _shape_bytes(comp.shapes.get(ops[1], "")) \
+                    if len(ops) > 1 else out_bytes
+                total += 2.0 * max(upd, 1.0)
+                continue
+            total += out_bytes
+            for o in self._operands(i):
+                if o in comp.shapes:
+                    total += _shape_bytes(comp.shapes[o])
+        return total
+
+    def total_hbm_bytes(self) -> float:
+        return self._expand(self._hbm_bytes, include_fusion_bodies=False)
+
+    # ------------------------------------------------------ collectives ----
+
+    def _collectives(self, comp: Computation) -> dict:
+        out = {k: {"count": 0.0, "payload_bytes": 0.0, "wire_bytes": 0.0,
+                   "by_group": {}} for k in COLLECTIVE_OPS}
+        for i in comp.instrs:
+            base = i.op
+            for k in COLLECTIVE_OPS:
+                if base == k or base == k + "-start":
+                    break
+            else:
+                continue
+            op = base.replace("-start", "")
+            payload = _shape_bytes(i.type_str)
+            if base.endswith("-start") and op in ("all-reduce", "all-gather",
+                                                  "collective-permute"):
+                # started ops' type includes (operand, result) tuples; halve
+                payload = payload / 2.0
+            mg = _GROUPS_RE.search(i.line)
+            if mg:
+                g = int(mg.group(2))
+            else:
+                mg = _GROUPS_LIST_RE.search(i.line)
+                g = len([x for x in mg.group(1).split(",") if x.strip()]) \
+                    if mg else 1
+            if op == "all-reduce":
+                wire = 2 * (g - 1) / max(g, 1) * payload
+            elif op == "all-gather":
+                wire = (g - 1) / max(g, 1) * payload
+            elif op == "reduce-scatter":
+                wire = (g - 1) * payload
+            elif op == "all-to-all":
+                wire = (g - 1) / max(g, 1) * payload
+            else:
+                wire = payload
+            rec = out[op]
+            rec["count"] += 1
+            rec["payload_bytes"] += payload
+            rec["wire_bytes"] += wire
+            key = str(g)
+            rec["by_group"][key] = rec["by_group"].get(key, 0.0) + wire
+        return out
+
+    def total_collectives(self) -> dict:
+        def merge(a, b, mult=1.0):
+            for k in COLLECTIVE_OPS:
+                a[k]["count"] += mult * b[k]["count"]
+                a[k]["payload_bytes"] += mult * b[k]["payload_bytes"]
+                a[k]["wire_bytes"] += mult * b[k]["wire_bytes"]
+                for g, v in b[k]["by_group"].items():
+                    a[k]["by_group"][g] = a[k]["by_group"].get(g, 0.0) \
+                        + mult * v
+            return a
+
+        memo = {}
+
+        def expand(name):
+            if name in memo:
+                return memo[name]
+            comp = self.computations.get(name)
+            zero = {k: {"count": 0.0, "payload_bytes": 0.0,
+                        "wire_bytes": 0.0, "by_group": {}}
+                    for k in COLLECTIVE_OPS}
+            if comp is None:
+                return zero
+            tot = merge(zero, self._collectives(comp))
+            for child, mult, kind in self._children(comp):
+                tot = merge(tot, expand(child), mult)
+            memo[name] = tot
+            return tot
+
+        out = expand(self.entry)
+        out["total_wire_bytes"] = sum(out[k]["wire_bytes"]
+                                      for k in COLLECTIVE_OPS)
+        out["total_count"] = sum(out[k]["count"] for k in COLLECTIVE_OPS)
+        return out
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    return {
+        "flops": mod.total_flops(),
+        "hbm_bytes": mod.total_hbm_bytes(),
+        "collectives": mod.total_collectives(),
+        "n_computations": len(mod.computations),
+    }

@@ -1,0 +1,113 @@
+"""Roofline analysis from dry-run artifacts (deliverable g, §Roofline).
+
+Terms (seconds, per chip, TPU v5e constants):
+
+  compute_s    = HLO_FLOPs / peak_FLOPs        (197 TFLOP/s bf16)
+  memory_s     = HLO_bytes / HBM_bw            (819 GB/s)
+  collective_s = wire_bytes / ICI_link_bw      (~50 GB/s/link; wire bytes
+                 are per-device from the partitioned HLO, so no further
+                 chip division; DCN-scale pod collectives are called out
+                 separately in EXPERIMENTS.md §Perf)
+
+FLOPs/bytes come from the scan-aware HLO walker (launch/hloparse.py), NOT
+``cost_analysis()`` — XLA counts while bodies once (EXPERIMENTS.md
+§Dry-run).  MODEL_FLOPS = 6*N*D for training (N_active for MoE), 2*N*tokens
+for single-forward serving steps; useful_ratio = MODEL_FLOPS / HLO_FLOPs
+catches remat/masked-attention/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # B/s
+ICI_BW = 50e9               # B/s per link
+MESH_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops_per_chip(rec: dict) -> float:
+    """6*N_active*D train; 2*N_active*tokens for prefill/decode."""
+    n = rec["active_params"]
+    chips = MESH_CHIPS[rec["mesh"]]
+    B, S = rec["global_batch"], rec["seq_len"]
+    if rec["kind"] == "train":
+        tokens = B * S
+        return 6.0 * n * tokens / chips
+    if rec["kind"] == "prefill":
+        return 2.0 * n * B * S / chips
+    return 2.0 * n * B / chips          # decode: one token per sequence
+
+
+def roofline_row(rec: dict) -> dict:
+    compute_s = rec["hlo_flops"] / PEAK_FLOPS
+    memory_s = rec["hlo_hbm_bytes"] / HBM_BW
+    coll_s = rec["collectives"]["total_wire_bytes"] / ICI_BW
+    dominant_s = max(compute_s, memory_s, coll_s)
+    bound = ("compute" if dominant_s == compute_s else
+             "memory" if dominant_s == memory_s else "collective")
+    mf = model_flops_per_chip(rec)
+    useful = mf / rec["hlo_flops"] if rec["hlo_flops"] else 0.0
+    ideal_s = mf / PEAK_FLOPS
+    return {
+        "cell": f"{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant_s": dominant_s, "bound": bound,
+        "model_flops_per_chip": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": (ideal_s / dominant_s) if dominant_s else 0.0,
+        "hbm_gib": (rec["memory_analysis"].get("argument_size_in_bytes", 0)
+                    + rec["memory_analysis"].get("temp_size_in_bytes", 0))
+        / 2**30,
+        "fits_16gib": (rec["memory_analysis"].get("argument_size_in_bytes", 0)
+                       + rec["memory_analysis"].get("temp_size_in_bytes", 0))
+        < 16 * 2**30,
+        "tag": rec.get("tag", ""),
+    }
+
+
+def load_cells(d: str, include_tagged: bool = False) -> list[dict]:
+    out = []
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json"):
+            continue
+        parts = name[:-5].split("__")
+        tagged = len(parts) > 3
+        if tagged and not include_tagged:
+            continue
+        with open(os.path.join(d, name)) as f:
+            rec = json.load(f)
+        rec["tag"] = parts[3] if tagged else ""
+        out.append(rec)
+    return out
+
+
+def roofline_table(d: str, include_tagged: bool = False) -> list[dict]:
+    return [roofline_row(r) for r in load_cells(d, include_tagged)]
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| cell | bound | compute s | memory s | collective s | "
+           "MODEL/HLO | roofline frac | HBM GiB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['cell']} | {r['bound']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['hbm_gib']:.1f} | {'Y' if r['fits_16gib'] else 'N'} |")
+    return hdr + "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    d = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+    rows = roofline_table(d, include_tagged="--tagged" in sys.argv)
+    print(markdown_table(rows))

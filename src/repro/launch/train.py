@@ -1,0 +1,108 @@
+"""Training launcher.
+
+CPU-scale end-to-end runs (examples/) and the entry point a real cluster
+would use (mesh + sharded state + checkpoint/restart + straggler monitor).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --smoke \
+      --steps 100 --seq-len 128 --global-batch 8 --ckpt-dir /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticDataset, \
+    loss_floor
+from repro.models.registry import ARCH_IDS, get_config, get_model
+from repro.models.sharding import MeshPlan
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault import StragglerMonitor, checkpoint_cadence_steps
+from repro.train.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="0 = Young/Daly auto cadence")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--data", default="lcg", choices=["lcg", "copy",
+                                                      "uniform"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    run = RunConfig(arch=args.arch, lr=args.lr, total_steps=args.steps,
+                    warmup_steps=max(args.steps // 10, 1),
+                    microbatches=args.microbatches,
+                    grad_compression=args.grad_compression, seed=args.seed)
+    model = get_model(cfg, run)
+    trainer = Trainer(model, run)
+
+    dcfg = DataConfig(kind=args.data, vocab_size=cfg.vocab_size,
+                      seq_len=args.seq_len, global_batch=args.global_batch,
+                      seed=args.seed)
+    ds = SyntheticDataset(dcfg)
+    print(f"[train] {args.arch} (smoke={args.smoke}) "
+          f"params={model.param_count():,} "
+          f"floor={loss_floor(dcfg):.3f} nats")
+
+    state = trainer.init_state(jax.random.PRNGKey(args.seed))
+    start_step = 0
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ck and args.resume and ck.latest_step() is not None:
+        state, start_step = ck.restore(state)
+        print(f"[train] resumed from step {start_step}")
+
+    cadence = args.ckpt_every or checkpoint_cadence_steps(
+        n_hosts=jax.device_count(), save_cost_s=1.0, step_time_s=1.0)
+    straggler = StragglerMonitor()
+    step_fn = trainer.make_train_step()
+    pf = Prefetcher(ds, start_step=start_step)
+    hist = []
+    t_last = time.perf_counter()
+    try:
+        for i in range(start_step, args.steps):
+            _, batch = next(pf)
+            batch = jax.tree.map(jnp.asarray, batch)
+            state, metrics = step_fn(state, batch)
+            dt = time.perf_counter() - t_last
+            t_last = time.perf_counter()
+            if straggler.observe(dt):
+                print(f"[train] straggler event at step {i + 1}: {dt:.2f}s")
+            if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
+                m = {k: round(float(v), 4) for k, v in metrics.items()}
+                m.update(step=i + 1, sec_per_step=round(dt, 3))
+                hist.append(m)
+                print(f"[train] {json.dumps(m)}")
+            if ck and (i + 1) % cadence == 0:
+                ck.save(i + 1, state, blocking=False)
+    finally:
+        pf.close()
+    if ck:
+        ck.wait()
+        ck.save(args.steps, state)
+    return hist
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,312 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d_model) — the encoder
+consumes them directly (the real conv1d x2 downsampling happens upstream).
+We map the assigned shape's ``seq_len`` to the decoder length and use
+``seq_len // 2`` encoder frames (the conv stack's 2x downsampling ratio),
+recorded in DESIGN.md.
+
+Whisper uses LayerNorm, GELU MLPs, sinusoidal encoder positions, absolute
+decoder positions, full (non-GQA) attention: n_kv_heads == n_heads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from . import layers as L
+from .sharding import MeshPlan, activation_spec, build_param_specs
+
+
+def _xattn_init(key, cfg: ModelConfig, dtype):
+    return L.mha_init(key, cfg, dtype)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, run: RunConfig | None = None,
+                 mesh: Mesh | None = None, plan: MeshPlan | None = None):
+        assert cfg.encdec is not None
+        self.cfg = cfg
+        self.run = run or RunConfig()
+        self.mesh = mesh
+        self.plan = plan or MeshPlan()
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.adtype = jnp.dtype(cfg.activation_dtype)
+
+    def _constrain(self, x, spec):
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            return lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+        return x
+
+    # ---------------------------------------------------------------- init
+
+    def _enc_block_init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 2)
+        return {
+            "attn_norm": L.layernorm_init(cfg.d_model, dt),
+            "attn": L.mha_init(ks[0], cfg, dt),
+            "mlp_norm": L.layernorm_init(cfg.d_model, dt),
+            "mlp": L.gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def _dec_block_init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 3)
+        return {
+            "attn_norm": L.layernorm_init(cfg.d_model, dt),
+            "attn": L.mha_init(ks[0], cfg, dt),
+            "xattn_norm": L.layernorm_init(cfg.d_model, dt),
+            "xattn": _xattn_init(ks[1], cfg, dt),
+            "mlp_norm": L.layernorm_init(cfg.d_model, dt),
+            "mlp": L.gelu_mlp_init(ks[2], cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 4)
+        return {
+            "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "enc_layers": L.stack_layer_params(
+                self._enc_block_init, ks[1], cfg.encdec.n_encoder_layers),
+            "dec_layers": L.stack_layer_params(
+                self._dec_block_init, ks[2], cfg.n_layers),
+            "enc_norm": L.layernorm_init(cfg.d_model, dt),
+            "final_norm": L.layernorm_init(cfg.d_model, dt),
+        }
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_specs(self):
+        return build_param_specs(self.param_shapes(), self.plan, self.mesh)
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(self.param_shapes()))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -------------------------------------------------------------- encode
+
+    def encode(self, params, frames):
+        """frames: (B, S_enc, d_model) — stub frontend output."""
+        cfg = self.cfg
+        B, S, d = frames.shape
+        pe = L.sinusoidal_positions(S, d).astype(self.adtype)
+        x = frames.astype(self.adtype) + pe[None]
+        x = self._constrain(x, activation_spec(self.plan))
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(xx, lp):
+            h = L.layernorm(lp["attn_norm"], xx)
+            h = L.self_attention(lp["attn"], h, cfg, positions, causal=False,
+                                 rope=False)
+            xx = xx + h
+            h = L.layernorm(lp["mlp_norm"], xx)
+            xx = xx + L.gelu_mlp(lp["mlp"], h)
+            xx = self._constrain(xx, activation_spec(self.plan))
+            return xx, None
+
+        x, _ = lax.scan(body, x, params["enc_layers"])
+        return L.layernorm(params["enc_norm"], x)
+
+    # -------------------------------------------------------------- decode
+
+    def _cross_attention(self, p, x, enc_out, positions_q, enc_positions):
+        cfg = self.cfg
+        B, S, _ = x.shape
+        H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        G = H // K
+        q = (x @ p["wq"]).reshape(B, S, K, G, Dh)
+        k = (enc_out @ p["wk"]).reshape(B, -1, K, Dh)
+        v = (enc_out @ p["wv"]).reshape(B, -1, K, Dh)
+        o = L.attention(q, k, v, positions_q, enc_positions, causal=False)
+        return L.mha_out(p, o, B, S)
+
+    def _dec_block(self, lp, x, enc_out, positions, enc_positions):
+        cfg = self.cfg
+        h = L.layernorm(lp["attn_norm"], x)
+        h = L.self_attention(lp["attn"], h, cfg, positions, causal=True,
+                             rope=False)
+        x = x + h
+        h = L.layernorm(lp["xattn_norm"], x)
+        x = x + self._cross_attention(lp["xattn"], h, enc_out, positions,
+                                      enc_positions)
+        h = L.layernorm(lp["mlp_norm"], x)
+        x = x + L.gelu_mlp(lp["mlp"], h)
+        return self._constrain(x, activation_spec(self.plan))
+
+    def forward(self, params, tokens, frames):
+        """Teacher-forced training forward -> logits (B, S_dec, V)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        B, S = tokens.shape
+        S_enc = enc_out.shape[1]
+        pe = L.sinusoidal_positions(S, cfg.d_model).astype(self.adtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.adtype)
+        x = x + pe[None]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        enc_positions = jnp.broadcast_to(
+            jnp.arange(S_enc, dtype=jnp.int32), (B, S_enc))
+
+        def body(xx, lp):
+            return self._dec_block(lp, xx, enc_out, positions,
+                                   enc_positions), None
+
+        x, _ = lax.scan(body, x, params["dec_layers"])
+        x = L.layernorm(params["final_norm"], x)
+        logits = (x @ params["embed"].T).astype(
+            jnp.dtype(cfg.logits_dtype))
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"], batch["frames"])
+        ce = L.cross_entropy_loss(logits, batch["labels"])
+        return ce, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int):
+        cfg = self.cfg
+        nl = cfg.n_layers
+        K, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {
+            "self": L.make_kv_cache(cfg, batch, max_len, self.adtype,
+                                    n_layers=nl),
+            "cross_k": jnp.zeros((nl, batch, enc_len, K, Dh), self.adtype),
+            "cross_v": jnp.zeros((nl, batch, enc_len, K, Dh), self.adtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params, tokens, frames, max_len: int | None = None):
+        """Encode audio + run the decoder prompt; build caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        B, S = tokens.shape
+        S_enc = enc_out.shape[1]
+        max_len = max_len or S
+        pe = L.sinusoidal_positions(S, cfg.d_model).astype(self.adtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.adtype) + pe
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        enc_positions = jnp.broadcast_to(
+            jnp.arange(S_enc, dtype=jnp.int32), (B, S_enc))
+        K, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+
+        def body(xx, lp):
+            h = L.layernorm(lp["attn_norm"], xx)
+            q, k, v = L.mha_project_qkv(lp["attn"], h, cfg, positions,
+                                        rope=False)
+            o = L.attention(q, k, v, positions, positions, causal=True)
+            xx = xx + L.mha_out(lp["attn"], o, B, S)
+            h = L.layernorm(lp["xattn_norm"], xx)
+            xx = xx + self._cross_attention(lp["xattn"], h, enc_out,
+                                            positions, enc_positions)
+            h = L.layernorm(lp["mlp_norm"], xx)
+            xx = xx + L.gelu_mlp(lp["mlp"], h)
+            cache = L.make_kv_cache(cfg, B, max_len, self.adtype)
+            cache = L.cache_write_prefill(cache, k, v)
+            ck = (enc_out @ lp["xattn"]["wk"]).reshape(B, S_enc, K, Dh)
+            cv = (enc_out @ lp["xattn"]["wv"]).reshape(B, S_enc, K, Dh)
+            return xx, (cache, ck, cv)
+
+        x, (self_cache, cross_k, cross_v) = lax.scan(
+            body, x, params["dec_layers"])
+        x = L.layernorm(params["final_norm"], x)
+        logits = (x[:, -1:] @ params["embed"].T).astype(
+            jnp.dtype(cfg.logits_dtype))[:, 0]
+        caches = {"self": self_cache, "cross_k": cross_k, "cross_v": cross_v,
+                  "pos": jnp.asarray(S, jnp.int32)}
+        return logits, caches
+
+    def decode_step(self, params, token, caches):
+        cfg = self.cfg
+        B = token.shape[0]
+        pos = caches["pos"]
+        x = jnp.take(params["embed"], token, axis=0).astype(self.adtype)
+        x = x + L.sinusoidal_position_at(pos, cfg.d_model).astype(
+            self.adtype)[None]
+        S_enc = caches["cross_k"].shape[2]
+        enc_positions = jnp.broadcast_to(
+            jnp.arange(S_enc, dtype=jnp.int32), (B, S_enc))
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        G = H // K
+
+        def body(xx, layer):
+            lp, cache, ck, cv = layer
+            h = L.layernorm(lp["attn_norm"], xx)
+            h, cache = L.self_attention_decode(lp["attn"], h, cfg, cache, pos,
+                                               rope=False)
+            xx = xx + h
+            h = L.layernorm(lp["xattn_norm"], xx)
+            q = (h @ lp["xattn"]["wq"]).reshape(B, 1, K, G, Dh)
+            o = L.attention_ref(q, ck, cv, positions, enc_positions,
+                                causal=False)
+            xx = xx + L.mha_out(lp["xattn"], o, B, 1)
+            h = L.layernorm(lp["mlp_norm"], xx)
+            xx = xx + L.gelu_mlp(lp["mlp"], h)
+            return xx, cache
+
+        x, self_cache = lax.scan(
+            body, x, (params["dec_layers"], caches["self"],
+                      caches["cross_k"], caches["cross_v"]))
+        new = dict(caches)
+        new["self"] = self_cache
+        new["pos"] = pos + 1
+        x = L.layernorm(params["final_norm"], x)
+        logits = (x @ params["embed"].T).astype(
+            jnp.dtype(cfg.logits_dtype))[:, 0]
+        return logits, new
+
+    def cache_specs(self, batch: int, max_len: int):
+        from .sharding import kv_cache_specs, shardable
+        cfg = self.cfg
+        layer = kv_cache_specs(self.plan, self.mesh, batch, max_len,
+                               cfg.n_kv_heads)
+        b_ax = shardable(self.mesh, self.plan.batch_axes, batch)
+        enc = self.enc_len(max_len)
+        tp = self.plan.tp
+        if cfg.n_kv_heads % self.mesh.shape[tp] == 0:
+            cross = P(None, b_ax, None, tp, None)
+        elif enc % self.mesh.shape[tp] == 0:
+            cross = P(None, b_ax, tp, None, None)
+        else:
+            cross = P(None, b_ax, None, None, None)
+        return {"self": layer, "cross_k": cross, "cross_v": cross,
+                "pos": P()}
+
+    # --------------------------------------------------------- input specs
+
+    def enc_len(self, seq_len: int) -> int:
+        return max(seq_len // 2, 8)
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        frames = jax.ShapeDtypeStruct(
+            (B, self.enc_len(S), cfg.d_model),
+            jnp.dtype(cfg.activation_dtype))
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "frames": frames}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "frames": frames}
+        caches = jax.eval_shape(
+            lambda: self.init_cache(B, S, self.enc_len(S)))
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "caches": caches}

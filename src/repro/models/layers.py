@@ -1,0 +1,436 @@
+"""Shared neural-net layers (pure JAX, functional).
+
+Conventions
+-----------
+* Params are nested dicts of ``jnp.ndarray``; layer stacks store each leaf
+  with a leading ``(L, ...)`` axis and run under ``jax.lax.scan``.
+* Activations: ``x`` is ``(B, S, d_model)``.
+* Attention is GQA throughout: ``n_heads`` query heads grouped over
+  ``n_kv_heads`` KV heads; supports causal masks, sliding windows, KV caches
+  (decode), bidirectional (encoder), qk-norm (Qwen3) and QKV bias (Qwen1.5).
+* Long sequences use a memory-bounded chunked attention (online softmax over
+  KV blocks inside a scan over Q blocks) — same math as the reference, peak
+  memory O(S * block) instead of O(S^2).  The Pallas flash-attention kernel
+  in ``repro.kernels`` is the TPU-optimized version of the same schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+Params = Any  # nested dict pytree
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis_size: int | None = None):
+    """Truncated-normal fan-in init (std = 1/sqrt(fan_in))."""
+    fan_in = in_axis_size or shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d), jnp.float32)
+            ).astype(dtype)
+
+
+def stack_layer_params(init_one, key, n_layers: int):
+    """Initialize ``n_layers`` identical layers with stacked (L, ...) leaves."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * lax.rsqrt(var + eps)
+    out = x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, ..., Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,Dh/2)
+    # broadcast over head axes between S and Dh
+    extra = x.ndim - 3
+    for _ in range(extra):
+        angles = angles[:, :, None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention core
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _build_mask(q_pos, kv_pos, causal: bool, window: Optional[int],
+                kv_valid=None):
+    """q_pos: (B,Sq) kv_pos: (B,Skv) -> bool (B,1,1,Sq,Skv) True=attend."""
+    qp = q_pos[:, None, None, :, None]
+    kp = kv_pos[:, None, None, None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= (qp - kp) < window
+    if kv_valid is not None:
+        m &= kv_valid[:, None, None, None, :]
+    return m
+
+
+def attention_ref(q, k, v, q_pos, kv_pos, *, causal=True,
+                  window: Optional[int] = None, kv_valid=None):
+    """Reference attention.
+
+    q: (B, Sq, K, G, Dh)   — K kv-heads x G query groups
+    k,v: (B, Skv, K, Dh)
+    returns (B, Sq, K, G, Dh)
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    # bf16 operands, f32 MXU accumulation — never materializes an f32 copy
+    # of K/V (with a stacked KV cache that copy costs 2x cache bytes/step)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _build_mask(q_pos, kv_pos, causal, window, kv_valid)  # (B,1,1,Sq,Skv)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attention_chunked(q, k, v, q_pos, kv_pos, *, causal=True,
+                      window: Optional[int] = None, kv_valid=None,
+                      q_block: int = 512, kv_block: int = 1024):
+    """Memory-bounded attention: scan over Q blocks, inner scan over KV
+    blocks with online softmax.  Equivalent to :func:`attention_ref`."""
+    B, Sq, K, G, Dh = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    n_qb = -(-Sq // qb)
+    n_kb = -(-Skv // kb)
+    pad_q = n_qb * qb - Sq
+    pad_k = n_kb * kb - Skv
+
+    if kv_valid is None:
+        kv_valid = jnp.ones((B, Skv), dtype=bool)
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_k)))
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad_k)))
+
+    # (n_qb, B, qb, ...) blocks
+    qs = q.reshape(B, n_qb, qb, K, G, Dh).swapaxes(0, 1)
+    qps = q_pos.reshape(B, n_qb, qb).swapaxes(0, 1)
+    ks = k.reshape(B, n_kb, kb, K, Dh).swapaxes(0, 1)
+    vs = v.reshape(B, n_kb, kb, K, Dh).swapaxes(0, 1)
+    kps = kv_pos.reshape(B, n_kb, kb).swapaxes(0, 1)
+    kvs = kv_valid.reshape(B, n_kb, kb).swapaxes(0, 1)
+
+    def q_step(_, qblk):
+        qi, qp = qblk
+
+        def kv_step(carry, kblk):
+            m_run, l_run, acc = carry
+            ki, vi, kp, kval = kblk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _build_mask(qp, kp, causal, window, kval)  # (B,1,1,qb,kb)
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, K, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qb, Dh), jnp.float32)
+        (m_f, l_f, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                      (ks, vs, kps, kvs))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]   # (B,K,G,qb,Dh)
+        return None, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_step, None, (qs, qps))          # (n_qb,B,K,G,qb,Dh)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, n_qb * qb, K, G, Dh)
+    return out[:, :Sq]
+
+
+def attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+              kv_valid=None, force_chunked: bool | None = None):
+    """Dispatch between reference and chunked attention by working-set size."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    use_chunked = (Sq * Skv > (1 << 22)) if force_chunked is None \
+        else force_chunked
+    if use_chunked and Sq > 1:
+        return attention_chunked(q, k, v, q_pos, kv_pos, causal=causal,
+                                 window=window, kv_valid=kv_valid)
+    return attention_ref(q, k, v, q_pos, kv_pos, causal=causal, window=window,
+                         kv_valid=kv_valid)
+
+
+# --------------------------------------------------------------------------
+# multi-head attention layer (projections + rope + cache)
+# --------------------------------------------------------------------------
+
+
+def mha_init(key, cfg: ModelConfig, dtype, cross: bool = False):
+    d = cfg.d_model
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * Dh), dtype),
+        "wk": dense_init(ks[1], (d, K * Dh), dtype),
+        "wv": dense_init(ks[2], (d, K * Dh), dtype),
+        "wo": dense_init(ks[3], (H * Dh, d), dtype, in_axis_size=H * Dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((K * Dh,), dtype)
+        p["bv"] = jnp.zeros((K * Dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(Dh, dtype)
+        p["k_norm"] = rmsnorm_init(Dh, dtype)
+    return p
+
+
+def mha_project_qkv(p, x, cfg: ModelConfig, positions, rope: bool = True):
+    """Project to q (B,S,K,G,Dh) and k,v (B,S,K,Dh), with rope + qk-norm."""
+    B, S, _ = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = H // K
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, K, G, Dh)
+    k = k.reshape(B, S, K, Dh)
+    v = v.reshape(B, S, K, Dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def mha_out(p, attn_out, B, S):
+    return attn_out.reshape(B, S, -1) @ p["wo"]
+
+
+def self_attention(p, x, cfg: ModelConfig, positions, *, causal=True,
+                   window=None, rope=True):
+    B, S, _ = x.shape
+    q, k, v = mha_project_qkv(p, x, cfg, positions, rope)
+    o = attention(q, k, v, positions, positions, causal=causal, window=window)
+    return mha_out(p, o, B, S)
+
+
+# -- KV cache: a ring buffer of ``capacity`` slots.  A full cache is simply
+#    capacity == max_len; a sliding-window cache sets capacity == window so
+#    decode state stays O(window) for ``long_500k`` (SWA archs).
+#    ``kv_pos[slot]`` is the absolute position stored there (-1 = empty);
+#    ``pos`` is the next position to write.
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype,
+                  n_layers: int | None = None):
+    """Cache leaves; with n_layers, leaves get a leading (L, ...) axis so the
+    decode step can scan over layers."""
+    K, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    lead = (n_layers,) if n_layers else ()
+    return {
+        "k": jnp.zeros((*lead, batch, capacity, K, Dh), dtype),
+        "v": jnp.zeros((*lead, batch, capacity, K, Dh), dtype),
+        "kv_pos": jnp.full((*lead, capacity), -1, jnp.int32),
+    }
+
+
+def cache_write_prefill(cache, k_new, v_new):
+    """Write S prefill positions 0..S-1 into one layer's cache (ring)."""
+    S = k_new.shape[1]
+    cap = cache["k"].shape[1]
+    if S >= cap:
+        start = S - cap
+        slots = (jnp.arange(start, S, dtype=jnp.int32)) % cap
+        k_new, v_new = k_new[:, -cap:], v_new[:, -cap:]
+        positions = jnp.arange(start, S, dtype=jnp.int32)
+    else:
+        slots = jnp.arange(S, dtype=jnp.int32)
+        positions = slots
+    return {
+        "k": cache["k"].at[:, slots].set(k_new),
+        "v": cache["v"].at[:, slots].set(v_new),
+        "kv_pos": cache["kv_pos"].at[slots].set(positions),
+    }
+
+
+def cache_write_decode(cache, k_new, v_new, pos):
+    """Write one token at absolute position ``pos`` (traced scalar)."""
+    cap = cache["k"].shape[1]
+    slot = pos % cap
+    return {
+        "k": cache["k"].at[:, slot].set(k_new[:, 0]),
+        "v": cache["v"].at[:, slot].set(v_new[:, 0]),
+        "kv_pos": cache["kv_pos"].at[slot].set(pos),
+    }
+
+
+def self_attention_decode(p, x, cfg: ModelConfig, cache: dict, pos, *,
+                          window=None, rope=True):
+    """One-token decode: x (B,1,d); ``cache`` is ONE layer's ring cache;
+    ``pos`` is the absolute position (traced scalar).  Returns (out, cache)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = mha_project_qkv(p, x, cfg, positions, rope)
+    cache = cache_write_decode(cache, k_new, v_new, pos)
+    cap = cache["k"].shape[1]
+    kv_pos = jnp.broadcast_to(cache["kv_pos"], (B, cap))
+    kv_valid = cache["kv_pos"] >= 0
+    o = attention_ref(q, cache["k"], cache["v"], positions, kv_pos,
+                      causal=True, window=window,
+                      kv_valid=jnp.broadcast_to(kv_valid, (B, cap)))
+    return mha_out(p, o, B, 1), cache
+
+
+# --------------------------------------------------------------------------
+# FFN variants
+# --------------------------------------------------------------------------
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d), dtype, in_axis_size=d_ff),
+    }
+
+
+def swiglu(p, x):
+    g = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "w1": dense_init(ks[0], (d, d_ff), dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "w2": dense_init(ks[1], (d_ff, d), dtype, in_axis_size=d_ff),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu((x @ p["w1"] + p["b1"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ p["w2"] + p["b2"]
+
+
+# --------------------------------------------------------------------------
+# embeddings / head
+# --------------------------------------------------------------------------
+
+
+def sinusoidal_positions(max_len: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((max_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def sinusoidal_position_at(pos, d: int) -> jnp.ndarray:
+    """Sinusoidal embedding for a single (traced) position -> (1, d)."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    angle = pos.astype(jnp.float32) / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((1, d), jnp.float32)
+    pe = pe.at[0, 0::2].set(jnp.sin(angle))
+    pe = pe.at[0, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def cross_entropy_loss(logits, labels, valid=None):
+    """logits (B,S,V) [any dtype, upcast], labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if valid is None:
+        return jnp.mean(nll)
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

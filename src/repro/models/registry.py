@@ -1,0 +1,60 @@
+"""Model factory: family -> model class, and the arch-config registry."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+from repro.configs.base import ModelConfig, RunConfig
+
+ARCH_IDS = [
+    "kimi-k2-1t-a32b",
+    "mixtral-8x22b",
+    "phi3-medium-14b",
+    "qwen3-32b",
+    "yi-9b",
+    "qwen1.5-32b",
+    "llava-next-34b",
+    "whisper-small",
+    "xlstm-125m",
+    "recurrentgemma-2b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    """Load ``repro/configs/<arch>.py`` and return CONFIG (or smoke())."""
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.smoke() if smoke else mod.CONFIG
+
+
+def get_model(cfg: ModelConfig, run: RunConfig | None = None,
+              mesh=None, plan=None) -> Any:
+    from .transformer import DecoderLM
+    from .encdec import EncDecLM
+    from .xlstm import XLSTMModel
+    from .rglru import RGLRUModel
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, run, mesh, plan)
+    if cfg.family == "audio":
+        return EncDecLM(cfg, run, mesh, plan)
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg, run, mesh, plan)
+    if cfg.family == "hybrid":
+        return RGLRUModel(cfg, run, mesh, plan)
+    raise KeyError(f"unknown family {cfg.family}")
+
+
+def supported_shapes(cfg: ModelConfig) -> list[str]:
+    """Which of the 4 LM shape cells this arch runs (spec: skip long_500k
+    for pure full-attention archs; note in DESIGN.md §Arch-applicability)."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        shapes.append("long_500k")
+    return shapes

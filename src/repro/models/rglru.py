@@ -1,0 +1,459 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU recurrent
+blocks + local (sliding-window) attention, pattern 1 attention : 2 recurrent.
+
+* RG-LRU: h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t), with
+  a_t = exp(-c * softplus(Lambda) * r_t), r_t/i_t input-sigmoid gates.
+  Training/prefill use ``lax.associative_scan`` (O(S log S) depth, no S^2
+  anywhere) — this is what makes ``long_500k`` runnable; decode keeps O(w)
+  state.  A Pallas kernel for the scan lives in repro/kernels/rg_lru.
+* Every temporal block (recurrent or local-attn) is followed by a gated MLP
+  block, as in Griffin.
+* 26 layers with unit (rec, rec, attn): 8 scanned units + 2 trailing rec.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from . import layers as L
+from .sharding import MeshPlan, activation_spec, build_param_specs
+
+LRU_C = 8.0
+
+
+# --------------------------------------------------------------------------
+# RG-LRU core
+# --------------------------------------------------------------------------
+
+
+def rg_lru_init(key, width: int):
+    ks = jax.random.split(key, 3)
+    # Lambda init so that a ~ Uniform(0.9, 0.999)^c at r=1 (Griffin A.2-ish)
+    u = jax.random.uniform(ks[0], (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / LRU_C))  # softplus^{-1}
+    return {
+        "wa": L.dense_init(ks[1], (width, width), jnp.float32),
+        "ba": jnp.zeros((width,), jnp.float32),
+        "wg": L.dense_init(ks[2], (width, width), jnp.float32),
+        "bg": jnp.zeros((width,), jnp.float32),
+        "lam": lam,
+    }
+
+
+def _rg_lru_coeffs(p, x):
+    """x (..., w) -> (a, b) of the recurrence h = a*h_prev + b."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wg"] + p["bg"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, b, log_a
+
+
+def rg_lru_scan(p, x, h0=None):
+    """x: (B,S,w) -> (y (B,S,w) float32, h_last (B,w))."""
+    a, b, log_a = _rg_lru_coeffs(p, x)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    acc_a, y = lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        # contribution of the initial state: prod of a's up to t
+        y = y + acc_a * h0[:, None, :]
+    return y, y[:, -1, :]
+
+
+def rg_lru_step(p, x_t, h_prev):
+    """x_t (B,w), h_prev (B,w) -> (y_t, h_t)."""
+    a, b, _ = _rg_lru_coeffs(p, x_t)
+    h = a * h_prev + b
+    return h, h
+
+
+def rg_lru_sequential(p, x, h0=None):
+    """Oracle for tests: plain scan over time."""
+    B, S, w = x.shape
+    h = h0 if h0 is not None else jnp.zeros((B, w), jnp.float32)
+
+    def step(h, xt):
+        h, y = rg_lru_step(p, xt, h)
+        return h, y
+
+    h, ys = lax.scan(step, h, x.swapaxes(0, 1))
+    return ys.swapaxes(0, 1), h
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv1d
+# --------------------------------------------------------------------------
+
+
+def conv1d_init(key, width: int, k: int):
+    return {"w": (jax.random.truncated_normal(key, -2, 2, (k, width),
+                                              jnp.float32) / math.sqrt(k)),
+            "b": jnp.zeros((width,), jnp.float32)}
+
+
+def conv1d_causal(p, x):
+    """x (B,S,w); y_t = sum_i w_i x_{t-i} + b."""
+    k = p["w"].shape[0]
+    xf = x.astype(jnp.float32)
+    y = xf * p["w"][0]
+    for i in range(1, k):
+        shifted = jnp.pad(xf, ((0, 0), (i, 0), (0, 0)))[:, :-i or None]
+        shifted = shifted[:, :xf.shape[1]]
+        y = y + shifted * p["w"][i]
+    return (y + p["b"]).astype(x.dtype)
+
+
+def conv1d_step(p, x_t, buf):
+    """x_t (B,w); buf (B,k-1,w) holds previous inputs (newest last)."""
+    k = p["w"].shape[0]
+    xf = x_t.astype(jnp.float32)
+    y = xf * p["w"][0] + p["b"]
+    for i in range(1, k):
+        y = y + buf[:, -i].astype(jnp.float32) * p["w"][i]
+    new_buf = jnp.concatenate([buf[:, 1:], x_t[:, None]], axis=1)
+    return y.astype(x_t.dtype), new_buf
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+
+
+class RGLRUModel:
+    """Griffin-style hybrid LM (family 'hybrid')."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig | None = None,
+                 mesh: Mesh | None = None, plan: MeshPlan | None = None):
+        assert cfg.hybrid is not None
+        self.cfg = cfg
+        self.run = run or RunConfig()
+        self.mesh = mesh
+        self.plan = plan or MeshPlan()
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.adtype = jnp.dtype(cfg.activation_dtype)
+        pat = cfg.hybrid.pattern
+        self.unit = pat
+        self.n_units = cfg.n_layers // len(pat)
+        self.tail = pat[:cfg.n_layers - self.n_units * len(pat)]
+        self.width = cfg.hybrid.lru_width or cfg.d_model
+
+    def _constrain(self, x):
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            return lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, activation_spec(self.plan)))
+        return x
+
+    # ---------------------------------------------------------------- init
+
+    def _rec_block_init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        d, w = cfg.d_model, self.width
+        ks = jax.random.split(key, 6)
+        return {
+            "norm": L.rmsnorm_init(d, dt),
+            "rec": {
+                "wx": L.dense_init(ks[0], (d, w), dt),
+                "wy": L.dense_init(ks[1], (d, w), dt),
+                "conv": conv1d_init(ks[2], w, cfg.hybrid.conv_width),
+                "lru": rg_lru_init(ks[3], w),
+                "wo": L.dense_init(ks[4], (w, d), dt, in_axis_size=w),
+            },
+            "mlp_norm": L.rmsnorm_init(d, dt),
+            "mlp": L.swiglu_init(ks[5], d, cfg.d_ff, dt),
+        }
+
+    def _attn_block_init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 2)
+        return {
+            "norm": L.rmsnorm_init(cfg.d_model, dt),
+            "attn": L.mha_init(ks[0], cfg, dt),
+            "mlp_norm": L.rmsnorm_init(cfg.d_model, dt),
+            "mlp": L.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def _unit_init(self, key):
+        ks = jax.random.split(key, len(self.unit))
+        out = {}
+        for i, kind in enumerate(self.unit):
+            init = (self._rec_block_init if kind == "rec"
+                    else self._attn_block_init)
+            out[f"{kind}_{i}"] = init(ks[i])
+        return out
+
+    def init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 3)
+        params = {
+            "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "units": L.stack_layer_params(self._unit_init, ks[1],
+                                          self.n_units),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        }
+        if self.tail:
+            tks = jax.random.split(ks[2], len(self.tail))
+            params["tail"] = [
+                (self._rec_block_init if kind == "rec"
+                 else self._attn_block_init)(k)
+                for kind, k in zip(self.tail, tks)]
+        return params
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_specs(self):
+        return build_param_specs(self.param_shapes(), self.plan, self.mesh)
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(self.param_shapes()))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -------------------------------------------------------------- blocks
+
+    def _rec_states_init(self, batch: int):
+        k = self.cfg.hybrid.conv_width
+        return {"h": jnp.zeros((batch, self.width), jnp.float32),
+                "conv": jnp.zeros((batch, k - 1, self.width), self.adtype)}
+
+    def _attn_cache_init(self, batch: int, max_len: int):
+        cap = min(max_len, self.cfg.local_window)
+        return L.make_kv_cache(self.cfg, batch, cap, self.adtype)
+
+    def _rec_block(self, p, x, positions, state=None, decode=False):
+        cfg = self.cfg
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        u = h @ p["rec"]["wx"]
+        g = jax.nn.gelu((h @ p["rec"]["wy"]).astype(jnp.float32))
+        new_state = state
+        if decode:
+            u1, conv_buf = conv1d_step(p["rec"]["conv"], u[:, 0],
+                                       state["conv"])
+            hs, _ = rg_lru_step(p["rec"]["lru"], u1, state["h"])
+            y = hs[:, None]
+            new_state = {"h": hs, "conv": conv_buf}
+        else:
+            u1 = conv1d_causal(p["rec"]["conv"], u)
+            y, h_last = rg_lru_scan(p["rec"]["lru"], u1,
+                                    h0=state["h"] if state else None)
+            if state is not None:
+                k = cfg.hybrid.conv_width
+                new_state = {"h": h_last,
+                             "conv": u[:, -(k - 1):].astype(self.adtype)}
+        y = (y.astype(jnp.float32) * g).astype(x.dtype)
+        x = x + y @ p["rec"]["wo"]
+        h = L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        x = x + L.swiglu(p["mlp"], h)
+        return self._constrain(x), new_state
+
+    def _attn_block(self, p, x, positions, cache=None, decode=False,
+                    pos=None):
+        cfg = self.cfg
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        if decode:
+            h, cache = L.self_attention_decode(p["attn"], h, cfg, cache, pos,
+                                               window=cfg.local_window)
+        else:
+            B, S, _ = x.shape
+            q, k, v = L.mha_project_qkv(p["attn"], h, cfg, positions)
+            o = L.attention(q, k, v, positions, positions, causal=True,
+                            window=cfg.local_window)
+            h = L.mha_out(p["attn"], o, B, S)
+            if cache is not None:
+                cache = L.cache_write_prefill(cache, k, v)
+        x = x + h
+        h2 = L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        x = x + L.swiglu(p["mlp"], h2)
+        return self._constrain(x), cache
+
+    def _apply_unit(self, up, x, positions, states=None, decode=False,
+                    pos=None, max_len=None, batch=None):
+        new_states = {}
+        for i, kind in enumerate(self.unit):
+            name = f"{kind}_{i}"
+            st = states[name] if states is not None else None
+            if kind == "rec":
+                x, new_states[name] = self._rec_block(
+                    up[name], x, positions, st, decode)
+            else:
+                x, new_states[name] = self._attn_block(
+                    up[name], x, positions, st, decode, pos)
+        return x, new_states
+
+    # ------------------------------------------------------------- forward
+
+    def _unit_states(self, batch: int, max_len: int):
+        out = {}
+        for i, kind in enumerate(self.unit):
+            out[f"{kind}_{i}"] = (self._rec_states_init(batch)
+                                  if kind == "rec"
+                                  else self._attn_cache_init(batch, max_len))
+        return out
+
+    def _states_init(self, batch: int, max_len: int):
+        states = {}
+        if self.n_units:
+            states["units"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[self._unit_states(batch, max_len)
+                  for _ in range(self.n_units)])
+        else:
+            states["units"] = {}
+        if self.tail:
+            states["tail"] = [
+                self._rec_states_init(batch) if kind == "rec"
+                else self._attn_cache_init(batch, max_len)
+                for kind in self.tail]
+        states["pos"] = jnp.zeros((), jnp.int32)
+        return states
+
+    def forward(self, params, tokens, img_embeds=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.adtype)
+        x = self._constrain(x)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(xx, up):
+            xx, _ = self._apply_unit(up, xx, positions)
+            return xx, None
+
+        x, _ = lax.scan(body, x, params["units"])
+        for kind, p in zip(self.tail, params.get("tail", [])):
+            fn = self._rec_block if kind == "rec" else self._attn_block
+            x, _ = fn(p, x, positions)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x @ params["embed"].T).astype(jnp.dtype(cfg.logits_dtype))
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"])
+        ce = L.cross_entropy_loss(logits, batch["labels"])
+        return ce, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+
+    def init_cache(self, batch: int, max_len: int):
+        return self._states_init(batch, max_len)
+
+    def prefill(self, params, tokens, img_embeds=None,
+                max_len: int | None = None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        max_len = max_len or S
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.adtype)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        states = self._states_init(B, max_len)
+
+        def body(xx, xs):
+            up, st = xs
+            xx, st = self._apply_unit(up, xx, positions, st)
+            return xx, st
+
+        new = {"pos": jnp.asarray(S, jnp.int32)}
+        if self.n_units:
+            x, new["units"] = lax.scan(body, x,
+                                       (params["units"], states["units"]))
+        else:
+            new["units"] = {}
+        if self.tail:
+            new["tail"] = []
+            for kind, p, st in zip(self.tail, params["tail"],
+                                   states["tail"]):
+                fn = self._rec_block if kind == "rec" else self._attn_block
+                x, st = fn(p, x, positions, st)
+                new["tail"].append(st)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x[:, -1:] @ params["embed"].T).astype(
+            jnp.dtype(cfg.logits_dtype))[:, 0]
+        return logits, new
+
+    def decode_step(self, params, token, caches):
+        cfg = self.cfg
+        B = token.shape[0]
+        pos = caches["pos"]
+        x = jnp.take(params["embed"], token, axis=0).astype(self.adtype)
+        positions = jnp.full((B, 1), pos, jnp.int32)
+
+        def body(xx, xs):
+            up, st = xs
+            xx, st = self._apply_unit(up, xx, positions, st, decode=True,
+                                      pos=pos)
+            return xx, st
+
+        new = dict(caches)
+        if self.n_units:
+            x, new["units"] = lax.scan(body, x,
+                                       (params["units"], caches["units"]))
+        if self.tail:
+            new["tail"] = []
+            for kind, p, st in zip(self.tail, params["tail"], caches["tail"]):
+                fn = self._rec_block if kind == "rec" else self._attn_block
+                x, st = fn(p, x, positions, st, decode=True) if kind == "rec" \
+                    else fn(p, x, positions, st, decode=True, pos=pos)
+                new["tail"].append(st)
+        new["pos"] = pos + 1
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x @ params["embed"].T).astype(
+            jnp.dtype(cfg.logits_dtype))[:, 0]
+        return logits, new
+
+    def cache_specs(self, batch: int, max_len: int):
+        from .sharding import path_str, shardable
+        plan, mesh = self.plan, self.mesh
+        b_ax = shardable(mesh, plan.batch_axes, batch)
+        cap = min(max_len, self.cfg.local_window)
+        tp = plan.tp
+        cap_ax = tp if cap % mesh.shape[tp] == 0 else None
+        shapes = jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+        def spec(path, l):
+            s = path_str(path)
+            if l.ndim == 0:
+                return P()
+            if s.endswith("/k") or s.endswith("/v"):
+                # (units?, B, cap, K, Dh)
+                parts = [None] * l.ndim
+                parts[l.ndim - 4] = b_ax
+                parts[l.ndim - 3] = cap_ax
+                return P(*parts)
+            # recurrent h/conv/kv_pos: batch-only where present
+            parts = [None] * l.ndim
+            for i, d in enumerate(l.shape):
+                if d == batch and i <= 1 and l.ndim > 1:
+                    parts[i] = b_ax
+                    break
+            return P(*parts)
+
+        return jax.tree_util.tree_map_with_path(spec, shapes)
+
+    # --------------------------------------------------------- input specs
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        caches = jax.eval_shape(lambda: self.init_cache(B, S))
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "caches": caches}

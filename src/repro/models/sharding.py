@@ -1,0 +1,231 @@
+"""Parameter / activation sharding rules.
+
+The logical mesh always has a tensor-parallel axis ``model`` and one or two
+data axes (``data`` or ``("pod", "data")``).  Rules:
+
+* TP (``model``): attention head projections, FFN hidden, vocab, experts (EP)
+* FSDP/ZeRO-3 (``data``): the other large matrix dimension of every weight
+* DP batch: ``("pod", "data")`` — the pod axis carries only data parallelism
+  (gradient all-reduce over DCN), never parameter shards, so cross-pod
+  traffic stays small (DESIGN.md §5).
+
+Specs are built *by path pattern* over the param pytree from
+``jax.eval_shape``, so models never hand-maintain a parallel spec tree.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    """Names of the logical axes in the active mesh."""
+
+    tp: str = "model"
+    fsdp: str | tuple | None = "data"  # None disables ZeRO param sharding
+    batch: tuple[str, ...] = ("data",)  # axes carrying the batch dim
+    ep: str = "model"                  # expert-parallel axis
+    sp: bool = False                   # sequence-parallel activations
+    moe_ws: bool = False               # weight-stationary expert sharding
+                                       # (FFN dim over fsdp, no per-use AG)
+
+    @property
+    def batch_axes(self):
+        return self.batch if len(self.batch) > 1 else self.batch[0]
+
+
+SINGLE_POD = MeshPlan(batch=("data",))
+MULTI_POD = MeshPlan(batch=("pod", "data"))
+
+
+# (path regex, spec builder) — first match wins; rank refers to the leaf
+# WITHOUT the stacked (L,) prefix, which is re-added automatically.
+def _rules(plan: MeshPlan):
+    tp, fs = plan.tp, plan.fsdp
+    return [
+        # vocab dim unsharded: a sharded-vocab gather forces the SPMD
+        # partitioner into full rematerialization (replicate-then-reshard);
+        # d-only sharding keeps the token gather local.  The unembed
+        # projection still gets TP on the vocab dim.
+        (r"embed$",                 lambda r: P(None, fs)),
+        (r"unembed$",               lambda r: P(fs, tp)),
+        (r"attn.*(wq|wk|wv)$",      lambda r: P(fs, tp)),
+        (r"attn.*wo$",              lambda r: P(tp, fs)),
+        (r"attn.*(bq|bk|bv)$",      lambda r: P(tp)),
+        (r"(router)$",              lambda r: P(fs, None)),
+        (r"experts.*(w_gate|w_up)$",
+         lambda r: P(tp, None, fs) if plan.moe_ws else P(tp, fs, None)),
+        (r"experts.*w_down$",
+         lambda r: P(tp, fs, None) if plan.moe_ws else P(tp, None, fs)),
+        (r"(shared|ffn|mlp).*(w_gate|w_up|w1)$", lambda r: P(fs, tp)),
+        (r"(shared|ffn|mlp).*(w_down|w2)$",      lambda r: P(tp, fs)),
+        (r"(ffn|mlp).*b1$",         lambda r: P(tp)),
+        (r"(ffn|mlp).*b2$",         lambda r: P(None)),
+        # recurrent blocks (xLSTM / RG-LRU): project d -> width
+        (r"(rec|lru|mlstm|slstm).*(w_in|wi|wq|wk|wv|w_gates|wx|wy)$",
+         lambda r: P(fs, tp) if r == 2 else P(None)),
+        (r"(rec|lru|mlstm|slstm).*(w_out|wo)$",
+         lambda r: P(tp, fs) if r == 2 else P(None)),
+        (r".*",                     lambda r: P(*([None] * r))),
+    ]
+
+
+def path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def build_param_specs(param_shapes, plan: MeshPlan, mesh: Mesh | None = None,
+                      stacked_prefixes: tuple[str, ...] = ("layers",
+                                                           "dense_layers",
+                                                           "units",
+                                                           "enc_layers",
+                                                           "dec_layers")):
+    """param_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape(init)).
+
+    Returns a matching pytree of PartitionSpec.  Leaves under a stacked
+    prefix get a leading ``None`` for the (L, ...) axis.  With ``mesh``
+    given, expert weights whose E dim does not divide the TP axis (e.g.
+    Mixtral's 8 experts on a 16-way axis) shard the FFN dim on TP instead —
+    otherwise they would end up replicated over TP and blow HBM.
+    """
+    rules = _rules(plan)
+    tp_size = mesh.shape[plan.tp] if mesh is not None else None
+
+    def expert_spec(name: str, dims) -> P:
+        tp, fs = plan.tp, plan.fsdp
+        e_ok = tp_size is None or dims[0] % tp_size == 0
+        if name == "w_down":
+            if e_ok:
+                return P(tp, fs, None) if plan.moe_ws else P(tp, None, fs)
+            return P(None, tp, fs)
+        if e_ok:
+            return P(tp, None, fs) if plan.moe_ws else P(tp, fs, None)
+        return P(None, fs, tp)
+
+    def spec_for(path, leaf):
+        s = path_str(path)
+        stacked = any(pfx in s.split("/") for pfx in stacked_prefixes)
+        rank = leaf.ndim - (1 if stacked else 0)
+        dims = leaf.shape[1:] if stacked else leaf.shape
+        m_exp = re.search(r"experts.*(w_gate|w_up|w_down)$", s)
+        if m_exp:
+            spec = expert_spec(m_exp.group(1), dims)
+            parts = list(spec)
+            if stacked:
+                parts = [None] + parts
+            return P(*parts)
+        for pat, fn in rules:
+            if re.search(pat, s):
+                spec = fn(rank)
+                # pad/trim to rank
+                parts = list(spec) + [None] * (rank - len(spec))
+                parts = parts[:rank]
+                # drop axis names on dims too small to shard meaningfully:
+                # leave 1-d tiny vectors replicated
+                if rank <= 1 and leaf.size < 1 << 14:
+                    parts = [None] * rank
+                if stacked:
+                    parts = [None] + parts
+                return P(*parts)
+        raise AssertionError("unreachable")
+
+    return jax.tree_util.tree_map_with_path(spec_for, param_shapes)
+
+
+def named_shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def axes_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def shardable(mesh: Mesh, axes, dim_size: int):
+    """Return the axes name(s) if dim_size divides evenly, else None."""
+    return axes if dim_size % axes_size(mesh, axes) == 0 else None
+
+
+def kv_cache_specs(plan: MeshPlan, mesh: Mesh, batch: int, capacity: int,
+                   n_kv_heads: int, stacked: bool = True):
+    """PartitionSpec for a ring KV cache {k,v:(L,B,cap,K,Dh), kv_pos:(L,cap)}.
+
+    Preference order for the big k/v tensors: shard KV heads on tp (local
+    cache update), else the capacity dim, else batch-only."""
+    b_ax = shardable(mesh, plan.batch_axes, batch)
+    tp = plan.tp
+    if n_kv_heads % mesh.shape[tp] == 0:
+        kv = (None, b_ax, None, tp, None)
+    elif capacity % mesh.shape[tp] == 0:
+        kv = (None, b_ax, tp, None, None)
+    else:
+        kv = (None, b_ax, None, None, None)
+    if not stacked:
+        kv = kv[1:]
+    kvp = (None, None) if stacked else (None,)
+    return {"k": P(*kv), "v": P(*kv), "kv_pos": P(*kvp)}
+
+
+def sanitize_specs(shapes, specs, mesh: Mesh):
+    """Drop axis names from dims the mesh axes don't divide (explicit
+    in_shardings require divisibility; e.g. xLSTM's (.., 2H=8) gate dims
+    cannot take the 16-way model axis)."""
+    def fix(shape_leaf, spec):
+        parts = list(spec) + [None] * (shape_leaf.ndim - len(spec))
+        out = []
+        for dim, ax in zip(shape_leaf.shape, parts):
+            if ax is None or dim % axes_size(mesh, ax) == 0:
+                out.append(ax)
+            else:
+                out.append(None)
+        return P(*out)
+
+    return jax.tree.map(fix, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def batch_only_specs(shapes, plan: MeshPlan, mesh: Mesh, batch: int,
+                     batch_dim_of: int = 1):
+    """Generic state specs: shard the batch dim where it matches, replicate
+    everything else (used for the small recurrent states of ssm/hybrid)."""
+    b_ax = shardable(mesh, plan.batch_axes, batch)
+
+    def leaf_spec(l):
+        parts = [None] * l.ndim
+        for i, s in enumerate(l.shape):
+            if s == batch and i <= batch_dim_of and l.ndim > 1:
+                parts[i] = b_ax
+                break
+        return P(*parts)
+
+    return jax.tree.map(leaf_spec, shapes)
+
+
+def batch_spec(plan: MeshPlan, rank: int = 2) -> P:
+    """Input batch (B, S, ...) sharding: B over batch axes."""
+    return P(plan.batch_axes, *([None] * (rank - 1)))
+
+
+def activation_spec(plan: MeshPlan) -> P:
+    """(B, S, d) activations: batch-sharded; seq over tp if sequence-parallel."""
+    if plan.sp:
+        return P(plan.batch_axes, plan.tp, None)
+    return P(plan.batch_axes, None, None)

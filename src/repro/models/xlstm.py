@@ -1,0 +1,532 @@
+"""xLSTM LM (Beck et al., arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+* mLSTM — matrix-memory LSTM with exponential gating.  Training/prefill use
+  the **chunkwise-parallel form** (intra-chunk quadratic + inter-chunk
+  recurrent state, like GLA/Mamba-2 chunking) so long sequences never
+  materialize S^2; decode uses the O(1)-state recurrent form.  The two forms
+  agree to numerical tolerance (tests/test_models_xlstm.py).
+* sLSTM — scalar-memory LSTM with exponential gating and per-head
+  block-diagonal recurrence; inherently sequential -> ``lax.scan`` over time.
+
+Deviations from the paper (recorded in DESIGN.md): forget gate uses
+log-sigmoid gating (the paper allows sigmoid or exp; log-sigmoid is the
+numerically stable choice), and the mLSTM causal conv is omitted.
+
+State is O(d^2/H) per layer -> ``long_500k`` decode is supported (ssm family).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from . import layers as L
+from .sharding import MeshPlan, activation_spec, build_param_specs
+
+
+# --------------------------------------------------------------------------
+# mLSTM core
+# --------------------------------------------------------------------------
+
+
+def mlstm_init(key, d_in: int, H: int, dtype):
+    """Projections at width d_in with H heads (Dh = d_in // H)."""
+    Dh = d_in // H
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": L.dense_init(ks[0], (d_in, d_in), dtype),
+        "wk": L.dense_init(ks[1], (d_in, d_in), dtype),
+        "wv": L.dense_init(ks[2], (d_in, d_in), dtype),
+        # scalar i/f gate preactivations per head
+        "w_gates": L.dense_init(ks[3], (d_in, 2 * H), jnp.float32),
+        "b_gates": jnp.zeros((2 * H,), jnp.float32),
+        "out_norm": {"scale": jnp.ones((d_in,), dtype)},
+    }
+
+
+def _mlstm_qkv(p, x, H):
+    B, S, d = x.shape
+    Dh = d // H
+    q = (x @ p["wq"]).reshape(B, S, H, Dh) / math.sqrt(Dh)
+    k = (x @ p["wk"]).reshape(B, S, H, Dh) / math.sqrt(Dh)
+    v = (x @ p["wv"]).reshape(B, S, H, Dh)
+    gates = x.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]  # (B,S,2H)
+    i_pre, f_pre = gates[..., :H], gates[..., H:]
+    log_f = jax.nn.log_sigmoid(f_pre)                            # <= 0
+    return q, k, v, i_pre, log_f
+
+
+def mlstm_state_init(batch: int, H: int, Dh: int):
+    return {
+        "C": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((batch, H, Dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_recurrent_step(state, q, k, v, i_pre, log_f):
+    """One timestep.  q,k,v: (B,H,Dh); i_pre,log_f: (B,H)."""
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    f_eff = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    i_eff = jnp.exp(i_pre - m_new)[..., None]
+    C = state["C"] * f_eff[..., None] + \
+        i_eff[..., None] * v[..., None, :] * k[..., :, None]
+    n = state["n"] * f_eff + i_eff * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                        jnp.exp(-m_new))[..., None]
+    h = jnp.einsum("bhde,bhd->bhe", C, q) / denom
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def mlstm_sequential(p, x, H, state=None):
+    """Oracle: scan the recurrent form over time.  x: (B,S,d_in)."""
+    B, S, d = x.shape
+    Dh = d // H
+    q, k, v, i_pre, log_f = _mlstm_qkv(p, x, H)
+    state = state or mlstm_state_init(B, H, Dh)
+
+    def step(st, t):
+        qt, kt, vt, it, ft = t
+        st, h = mlstm_recurrent_step(st, qt, kt, vt, it, ft)
+        return st, h
+
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          i_pre.transpose(1, 0, 2), log_f.transpose(1, 0, 2))
+    state, hs = lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d)
+    return h.astype(x.dtype), state
+
+
+def mlstm_chunkwise(p, x, H, chunk: int = 256, state=None):
+    """Chunkwise-parallel mLSTM.  Matches :func:`mlstm_sequential`."""
+    B, S, d = x.shape
+    Dh = d // H
+    q, k, v, i_pre, log_f = _mlstm_qkv(p, x, H)
+    W = min(chunk, S)
+    pad = (-S) % W
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded steps: i = -inf (no input), f = 0 (keep state)
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    NC = (S + pad) // W
+
+    def to_chunks(a):
+        return a.reshape(B, NC, W, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q.astype(jnp.float32)), \
+        to_chunks(k.astype(jnp.float32)), to_chunks(v.astype(jnp.float32))
+    ic, fc = to_chunks(i_pre), to_chunks(log_f)
+
+    state = state or mlstm_state_init(B, H, Dh)
+
+    def chunk_step(st, ch):
+        qi, ki, vi, ii, fi = ch          # (B,W,H,*) / gates (B,W,H)
+        F = jnp.cumsum(fi, axis=1)       # (B,W,H) inclusive cumsum of log f
+        Ftot = F[:, -1]                  # (B,H)
+        # intra-chunk log weights: logD[b,h,t,j] = F_t - F_j + i_j, j <= t
+        logD = (F[:, :, None, :] - F[:, None, :, :]
+                + ii[:, None, :, :])                     # (B,Wq,Wk,H)
+        tidx = jnp.arange(qi.shape[1])
+        causal = tidx[:, None] >= tidx[None, :]
+        logD = jnp.where(causal[None, :, :, None], logD, -jnp.inf)
+        m_intra = jnp.max(logD, axis=2)                  # (B,W,H)
+        # inter-chunk: state decayed to step t has log-scale F_t + m_prev
+        m_inter = F + st["m"][:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)              # (B,W,H)
+        D = jnp.exp(logD - m_t[:, :, None, :])           # (B,Wq,Wk,H)
+        inter_scale = jnp.exp(m_inter - m_t)             # (B,W,H)
+        # scores
+        s = jnp.einsum("bthd,bjhd->btjh", qi, ki) * D
+        h_intra = jnp.einsum("btjh,bjhd->bthd", s, vi)
+        n_intra = jnp.einsum("btjh,bjhd->bthd", D, ki)
+        h_inter = jnp.einsum("bthd,bhde->bthe", qi * inter_scale[..., None],
+                             st["C"])
+        n_inter = st["n"][:, None] * inter_scale[..., None]
+        n_t = n_intra + n_inter
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, qi)),
+                            jnp.exp(-m_t))[..., None]
+        h = (h_intra + h_inter) / denom                  # (B,W,H,Dh)
+        # ---- state update to end of chunk
+        m_next = jnp.maximum(Ftot + st["m"],
+                             jnp.max(Ftot[:, None] - F + ii, axis=1))
+        carry_scale = jnp.exp(Ftot + st["m"] - m_next)   # (B,H)
+        w_j = jnp.exp(Ftot[:, None] - F + ii - m_next[:, None])  # (B,W,H)
+        C_new = st["C"] * carry_scale[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", w_j, ki, vi)
+        n_new = st["n"] * carry_scale[..., None] + jnp.einsum(
+            "bjh,bjhd->bhd", w_j, ki)
+        return {"C": C_new, "n": n_new, "m": m_next}, h
+
+    state, hs = lax.scan(chunk_step, state, (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(B, NC * W, H, Dh)[:, :S]
+    return h.reshape(B, S, d).astype(x.dtype), state
+
+
+# --------------------------------------------------------------------------
+# sLSTM core
+# --------------------------------------------------------------------------
+
+
+def slstm_init(key, d: int, H: int, dtype):
+    Dh = d // H
+    ks = jax.random.split(key, 2)
+    return {
+        "wx": L.dense_init(ks[0], (d, 4 * d), jnp.float32),
+        # per-head recurrent weights (H, Dh, 4*Dh)
+        "wr": (jax.random.truncated_normal(ks[1], -2, 2, (H, Dh, 4 * Dh),
+                                           jnp.float32) / math.sqrt(Dh)),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+    }
+
+
+def slstm_state_init(batch: int, d: int, H: int):
+    Dh = d // H
+    z = jnp.zeros((batch, H, Dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, H, Dh), -1e30), "h": z}
+
+
+def slstm_cell(p, st, x_pre, H):
+    """One recurrence step from PRECOMPUTED input preactivations.
+
+    x_pre: (B, 4d) = x_t @ wx + b, computed outside the time scan so the
+    d-sharded GEMM (and its TP collective) runs once for the whole sequence
+    instead of once per timestep (cuts the per-step collectives that
+    dominated the xlstm prefill dry-run)."""
+    B = x_pre.shape[0]
+    d = x_pre.shape[1] // 4
+    Dh = d // H
+    rec = jnp.einsum("bhd,hde->bhe", st["h"], p["wr"])     # (B,H,4Dh)
+    pre = x_pre.reshape(B, H, 4 * Dh) + rec
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + st["m"], i_pre)
+    i_eff = jnp.exp(i_pre - m_new)
+    f_eff = jnp.exp(log_f + st["m"] - m_new)
+    c = f_eff * st["c"] + i_eff * jnp.tanh(z_pre)
+    n = f_eff * st["n"] + i_eff
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h}, h.reshape(B, d)
+
+
+def slstm_step(p, st, x_t, H):
+    """x_t: (B, d) -> (state, h (B,d)).  Decode-path single step."""
+    pre = x_t.astype(jnp.float32) @ p["wx"] + p["b"]      # (B, 4d)
+    return slstm_cell(p, st, pre, H)
+
+
+def slstm_sequential(p, x, H, state=None):
+    B, S, d = x.shape
+    state = state or slstm_state_init(B, d, H)
+    # input preactivations for the WHOLE sequence in one sharded GEMM
+    x_pre = x.astype(jnp.float32) @ p["wx"] + p["b"]      # (B, S, 4d)
+
+    def step(st, pre_t):
+        st, h = slstm_cell(p, st, pre_t, H)
+        return st, h
+
+    state, hs = lax.scan(step, state, x_pre.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).astype(x.dtype), state
+
+
+# --------------------------------------------------------------------------
+# blocks / model
+# --------------------------------------------------------------------------
+
+
+class XLSTMModel:
+    """Alternating mLSTM/sLSTM LM (family 'ssm')."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig | None = None,
+                 mesh: Mesh | None = None, plan: MeshPlan | None = None):
+        assert cfg.hybrid is not None
+        self.cfg = cfg
+        self.run = run or RunConfig()
+        self.mesh = mesh
+        self.plan = plan or MeshPlan()
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.adtype = jnp.dtype(cfg.activation_dtype)
+        pat = cfg.hybrid.pattern
+        reps = cfg.n_layers // len(pat)
+        rem = cfg.n_layers - reps * len(pat)
+        self.unit = pat
+        self.n_units = reps
+        self.tail = pat[:rem]
+
+    @property
+    def H(self):
+        return self.cfg.n_heads
+
+    def _constrain(self, x):
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            return lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, activation_spec(self.plan)))
+        return x
+
+    # ---------------------------------------------------------------- init
+
+    def _mlstm_block_init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        d = cfg.d_model
+        pf = cfg.hybrid.mlstm_proj_factor
+        d_in = int(d * pf)
+        d_in -= d_in % self.H
+        ks = jax.random.split(key, 3)
+        return {
+            "kind": "mlstm",
+            "norm": L.rmsnorm_init(d, dt),
+            "w_up": L.dense_init(ks[0], (d, 2 * d_in), dt),
+            "mlstm": mlstm_init(ks[1], d_in, self.H, dt),
+            "w_down": L.dense_init(ks[2], (d_in, d), dt, in_axis_size=d_in),
+        }
+
+    def _slstm_block_init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        d = cfg.d_model
+        pf = cfg.hybrid.slstm_proj_factor
+        d_ff = int(d * pf)
+        ks = jax.random.split(key, 3)
+        return {
+            "kind": "slstm",
+            "norm": L.rmsnorm_init(d, dt),
+            "slstm": slstm_init(ks[0], d, self.H, jnp.float32),
+            "ffn_norm": L.rmsnorm_init(d, dt),
+            "ffn": L.swiglu_init(ks[1], d, d_ff, dt),
+        }
+
+    def _unit_init(self, key):
+        ks = jax.random.split(key, len(self.unit))
+        out = {}
+        for i, kind in enumerate(self.unit):
+            init = (self._mlstm_block_init if kind == "mlstm"
+                    else self._slstm_block_init)
+            blk = init(ks[i])
+            blk.pop("kind")
+            out[f"{kind}_{i}"] = blk
+        return out
+
+    def init(self, key):
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 4)
+        params = {
+            "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "units": L.stack_layer_params(self._unit_init, ks[1],
+                                          self.n_units),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        }
+        if self.tail:
+            tail_ks = jax.random.split(ks[2], len(self.tail))
+            params["tail"] = []
+            for kind, k in zip(self.tail, tail_ks):
+                init = (self._mlstm_block_init if kind == "mlstm"
+                        else self._slstm_block_init)
+                blk = init(k)
+                blk.pop("kind")
+                params["tail"].append(blk)
+        return params
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_specs(self):
+        return build_param_specs(self.param_shapes(), self.plan, self.mesh)
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(self.param_shapes()))
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -------------------------------------------------------------- blocks
+
+    def _mlstm_block(self, p, x, state=None, decode=False):
+        cfg = self.cfg
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        u = h @ p["w_up"]
+        d_in = u.shape[-1] // 2
+        core_in, z = u[..., :d_in], u[..., d_in:]
+        if decode:
+            B = x.shape[0]
+            Dh = d_in // self.H
+            q, k, v, i_pre, log_f = _mlstm_qkv(p["mlstm"], core_in, self.H)
+            state, hh = mlstm_recurrent_step(
+                state, q[:, 0].astype(jnp.float32),
+                k[:, 0].astype(jnp.float32),
+                v[:, 0].astype(jnp.float32), i_pre[:, 0], log_f[:, 0])
+            hh = hh.reshape(B, 1, d_in).astype(x.dtype)
+        else:
+            hh, state = mlstm_chunkwise(p["mlstm"], core_in, self.H,
+                                        chunk=cfg.hybrid.chunk_size,
+                                        state=state)
+        hh = L.rmsnorm(p["mlstm"]["out_norm"], hh, cfg.norm_eps)
+        hh = hh * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+        return x + hh @ p["w_down"], state
+
+    def _slstm_block(self, p, x, state=None, decode=False):
+        cfg = self.cfg
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        if decode:
+            state, hh = slstm_step(p["slstm"], state, h[:, 0], self.H)
+            hh = hh[:, None].astype(x.dtype)
+        else:
+            hh, state = slstm_sequential(p["slstm"], h, self.H, state)
+        x = x + hh
+        h = L.rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+        return x + L.swiglu(p["ffn"], h), state
+
+    def _apply_unit(self, unit_p, x, states=None, decode=False):
+        new_states = {}
+        for i, kind in enumerate(self.unit):
+            name = f"{kind}_{i}"
+            st = states[name] if states else None
+            fn = self._mlstm_block if kind == "mlstm" else self._slstm_block
+            x, new_states[name] = fn(unit_p[name], x, st, decode)
+        return x, new_states
+
+    # ------------------------------------------------------------- forward
+
+    def _states_init(self, batch: int):
+        cfg = self.cfg
+        d = cfg.d_model
+        pf = cfg.hybrid.mlstm_proj_factor
+        d_in = int(d * pf)
+        d_in -= d_in % self.H
+        Dh_m = d_in // self.H
+
+        def unit_states():
+            out = {}
+            for i, kind in enumerate(self.unit):
+                out[f"{kind}_{i}"] = (
+                    mlstm_state_init(batch, self.H, Dh_m) if kind == "mlstm"
+                    else slstm_state_init(batch, d, self.H))
+            return out
+
+        states = {"units": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[unit_states() for _ in range(self.n_units)])} \
+            if self.n_units else {"units": {}}
+        if self.tail:
+            states["tail"] = [
+                mlstm_state_init(batch, self.H, Dh_m) if kind == "mlstm"
+                else slstm_state_init(batch, d, self.H)
+                for kind in self.tail]
+        states["pos"] = jnp.zeros((), jnp.int32)
+        return states
+
+    def forward(self, params, tokens, img_embeds=None):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.adtype)
+        x = self._constrain(x)
+
+        def body(xx, up):
+            xx, _ = self._apply_unit(up, xx)
+            return xx, None
+
+        x, _ = lax.scan(body, x, params["units"])
+        for kind, p in zip(self.tail, params.get("tail", [])):
+            fn = self._mlstm_block if kind == "mlstm" else self._slstm_block
+            x, _ = fn(p, x)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x @ params["embed"].T).astype(jnp.dtype(cfg.logits_dtype))
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"])
+        ce = L.cross_entropy_loss(logits, batch["labels"])
+        return ce, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+
+    def init_cache(self, batch: int, max_len: int):
+        # recurrent state only — independent of max_len (that's the point)
+        return self._states_init(batch)
+
+    def prefill(self, params, tokens, img_embeds=None,
+                max_len: int | None = None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.adtype)
+
+        def body(xx, xs):
+            up, st = xs
+            xx, st = self._apply_unit(up, xx, st)
+            return xx, st
+
+        states = self._states_init(B)
+        if self.n_units:
+            x, unit_states = lax.scan(body, x,
+                                      (params["units"], states["units"]))
+        else:
+            unit_states = states["units"]
+        new = {"units": unit_states, "pos": jnp.asarray(S, jnp.int32)}
+        if self.tail:
+            new["tail"] = []
+            for kind, p, st in zip(self.tail, params["tail"],
+                                   states["tail"]):
+                fn = (self._mlstm_block if kind == "mlstm"
+                      else self._slstm_block)
+                x, st = fn(p, x, st)
+                new["tail"].append(st)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x[:, -1:] @ params["embed"].T).astype(
+            jnp.dtype(cfg.logits_dtype))[:, 0]
+        return logits, new
+
+    def decode_step(self, params, token, caches):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0).astype(self.adtype)
+
+        def body(xx, xs):
+            up, st = xs
+            xx, st = self._apply_unit(up, xx, st, decode=True)
+            return xx, st
+
+        new = dict(caches)
+        if self.n_units:
+            x, new["units"] = lax.scan(body, x,
+                                       (params["units"], caches["units"]))
+        if self.tail:
+            new["tail"] = []
+            for kind, p, st in zip(self.tail, params["tail"], caches["tail"]):
+                fn = (self._mlstm_block if kind == "mlstm"
+                      else self._slstm_block)
+                x, st = fn(p, x, st, decode=True)
+                new["tail"].append(st)
+        new["pos"] = caches["pos"] + 1
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x @ params["embed"].T).astype(
+            jnp.dtype(cfg.logits_dtype))[:, 0]
+        return logits, new
+
+    def cache_specs(self, batch: int, max_len: int):
+        from .sharding import batch_only_specs
+        shapes = jax.eval_shape(lambda: self.init_cache(batch, max_len))
+        return batch_only_specs(shapes, self.plan, self.mesh, batch)
+
+    # --------------------------------------------------------- input specs
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        caches = jax.eval_shape(lambda: self.init_cache(B, S))
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "caches": caches}

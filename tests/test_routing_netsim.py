@@ -1,0 +1,167 @@
+"""Routing (DAL, §5.2) and flow-level simulator invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MPHX, SprayConfig, split_chunks, spray_completion_time
+from repro.core.netsim import (
+    DEFAULT_NET,
+    allreduce_time,
+    alltoall_time,
+    hd_allreduce_time,
+    hierarchical_allreduce_time,
+    ring_allreduce_time,
+    uniform_throughput_fraction,
+    zero_load_latency,
+)
+from repro.core.planes import plane_failure_degradation, spray_efficiency
+from repro.core.routing import (
+    HyperXRouter,
+    bit_complement_traffic,
+    minimal_vs_adaptive_report,
+    neighbor_shift_traffic,
+    uniform_traffic,
+)
+
+
+@pytest.fixture(scope="module")
+def small():
+    return MPHX(n=2, p=8, dims=(8, 8))
+
+
+# ------------------------------------------------------------------ routing
+
+
+def test_minimal_paths_are_minimal(small):
+    r = HyperXRouter(small)
+    for src, dst in [(0, 63), (5, 40), (0, 7)]:
+        paths = r.minimal_paths(src, dst)
+        mism = len(r.mismatched_dims(src, dst))
+        for p in paths:
+            assert len(p) == mism + 1
+            assert p[0] == src and p[-1] == dst
+            for u, v in zip(p, p[1:]):
+                assert r.graph.multiplicity(u, v) > 0, "hop must be a link"
+
+
+def test_deroute_paths_valid(small):
+    r = HyperXRouter(small)
+    for p in r.deroute_paths(0, 63):
+        assert p[0] == 0 and p[-1] == 63
+        for u, v in zip(p, p[1:]):
+            assert r.graph.multiplicity(u, v) > 0
+        # DAL: at most one deroute -> <= mismatched+1 switch hops
+        assert len(p) - 1 <= len(r.mismatched_dims(0, 63)) + 1
+
+
+def test_load_conservation(small):
+    """Total link load == sum over demands of (gbps * path_length)."""
+    r = HyperXRouter(small)
+    demands = neighbor_shift_traffic(small, 100.0)
+    ll = r.route(demands, mode="minimal")
+    total = sum(ll.loads.values())
+    expect = sum(demands.values())  # all paths are 1 switch-hop
+    assert total == pytest.approx(expect, rel=1e-9)
+
+
+def test_section52_minimal_is_thin(small):
+    """§5.2: minimal paths between adjacent switches are bandwidth-thin;
+    adaptive (non-minimal) recovers >= 3x throughput on this instance."""
+    rep = minimal_vs_adaptive_report(small, offered_per_nic_gbps=1600.0)
+    assert rep["minimal"]["max_util"] == pytest.approx(
+        rep["analytic_minimal_max_util"], rel=1e-6)
+    assert rep["adaptive"]["throughput_fraction"] >= \
+        3.0 * rep["minimal"]["throughput_fraction"]
+    assert rep["valiant"]["throughput_fraction"] > \
+        rep["minimal"]["throughput_fraction"]
+
+
+def test_uniform_traffic_is_feasible(small):
+    r = HyperXRouter(small)
+    ll = r.route(uniform_traffic(small, 1600.0), mode="minimal")
+    # uniform traffic at full injection should be near-sustainable on HyperX
+    assert ll.max_utilization() < 1.6
+
+
+def test_bit_complement_adaptive_beats_minimal(small):
+    r = HyperXRouter(small)
+    d = bit_complement_traffic(small, 1600.0)
+    mn = r.route(d, mode="minimal").max_utilization()
+    ad = r.route(d, mode="adaptive").max_utilization()
+    assert ad <= mn + 1e-9
+
+
+# ------------------------------------------------------------------- netsim
+
+
+def test_latency_ordering_matches_diameter():
+    """§1: MPHX(8,256,256) has the lowest zero-load latency (diameter 3)."""
+    from repro.core import table2_topologies
+
+    topos = table2_topologies()
+    lat = {t.name: zero_load_latency(t) for t in topos}
+    assert min(lat, key=lat.get) == "8-Plane 1D HyperX"
+
+
+def test_allreduce_estimates_positive(small):
+    for fn in (ring_allreduce_time, hd_allreduce_time,
+               hierarchical_allreduce_time):
+        est = fn(small, 2**20)
+        assert est.latency_s > 0 and est.bandwidth_s > 0
+    best = allreduce_time(small, 2**20)
+    assert best.total_s <= hd_allreduce_time(small, 2**20).total_s
+
+
+@given(mb=st.floats(0.25, 1024))
+@settings(max_examples=20, deadline=None)
+def test_allreduce_bandwidth_term_scales_linearly(mb):
+    t = MPHX(n=8, p=256, dims=(256,))
+    a = hierarchical_allreduce_time(t, mb * 2**20)
+    b = hierarchical_allreduce_time(t, 2 * mb * 2**20)
+    assert b.bandwidth_s == pytest.approx(2 * a.bandwidth_s, rel=1e-6)
+    assert b.latency_s == pytest.approx(a.latency_s, rel=1e-6)
+
+
+def test_uniform_throughput_full_bisection_networks():
+    from repro.core import table2_topologies
+
+    for t in table2_topologies():
+        f = uniform_throughput_fraction(t)
+        assert 0.5 <= f <= 1.0, t.name
+
+
+# ------------------------------------------------------------------- planes
+
+
+@given(total=st.integers(1, 1 << 28), n=st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_spray_chunks_conserve_bytes(total, n):
+    cfg = SprayConfig(n_planes=n)
+    per = split_chunks(total, cfg)
+    assert sum(per) == total
+    assert max(per) - min(per) <= cfg.chunk_bytes
+
+
+def test_spray_efficiency_high_for_large_flows():
+    cfg = SprayConfig(n_planes=8)
+    assert spray_efficiency(1 << 30, 1600.0, cfg) > 0.95
+    # small flows pay chunk overhead
+    assert spray_efficiency(1 << 12, 1600.0, cfg) < 0.95
+
+
+def test_plane_failure_respray():
+    cfg = SprayConfig(n_planes=4)
+    t_ok = spray_completion_time(1 << 26, 1600.0, cfg)
+    t_deg = spray_completion_time(1 << 26, 1600.0, cfg,
+                                  plane_skew=[1.0, 1.0, 1.0, math.inf])
+    assert t_deg > t_ok
+    assert plane_failure_degradation(cfg) == pytest.approx(0.75)
+
+
+def test_all_planes_down_raises():
+    cfg = SprayConfig(n_planes=2)
+    with pytest.raises(RuntimeError):
+        spray_completion_time(1 << 20, 1600.0, cfg,
+                              plane_skew=[math.inf, math.inf])

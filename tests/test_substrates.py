@@ -1,0 +1,222 @@
+"""Tests for optimizer, data pipeline, checkpointing, fault tolerance."""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticDataset, \
+    loss_floor
+from repro.optim.adamw import AdamW, global_norm
+from repro.optim.schedule import warmup_cosine
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault import (HeartbeatMonitor, StragglerMonitor,
+                               checkpoint_cadence_steps, plan_remesh)
+from repro.train.trainer import TrainState, compress_grads_ef
+
+
+# ------------------------------------------------------------------ AdamW
+
+
+def test_adamw_matches_reference_numpy():
+    """Our AdamW against a hand-rolled numpy reference on a small problem."""
+    opt = AdamW(lr=1e-2, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+                grad_clip_norm=None)
+    p = {"w": jnp.array([1.0, -2.0, 3.0]), "norm_scale": jnp.array([1.0])}
+    st_ = opt.init(p)
+    m = {k: np.zeros_like(np.asarray(v)) for k, v in p.items()}
+    v = {k: np.zeros_like(np.asarray(v)) for k, v in p.items()}
+    pn = {k: np.asarray(x).copy() for k, x in p.items()}
+    for t in range(1, 6):
+        g = {"w": jnp.array([0.1, 0.2, -0.3]) * t,
+             "norm_scale": jnp.array([0.05]) * t}
+        p, st_, _ = opt.update(g, st_, p)
+        for k in pn:
+            gn = np.asarray(g[k])
+            m[k] = 0.9 * m[k] + 0.1 * gn
+            v[k] = 0.999 * v[k] + 0.001 * gn**2
+            mh = m[k] / (1 - 0.9**t)
+            vh = v[k] / (1 - 0.999**t)
+            pn[k] -= 1e-2 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p["w"]), pn["w"], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p["norm_scale"]), pn["norm_scale"],
+                               rtol=1e-5)
+
+
+def test_adamw_weight_decay_skips_norms_and_vectors():
+    opt = AdamW(lr=1e-2, weight_decay=0.5, grad_clip_norm=None)
+    p = {"ffn": {"w_up": jnp.ones((4, 4))}, "attn_norm": {"scale": jnp.ones((4, 4))}}
+    st_ = opt.init(p)
+    g = jax.tree.map(jnp.zeros_like, p)
+    p2, _, _ = opt.update(g, st_, p)
+    assert float(jnp.abs(p2["ffn"]["w_up"] - 1).max()) > 0  # decayed
+    assert float(jnp.abs(p2["attn_norm"]["scale"] - 1).max()) == 0  # skipped
+
+
+def test_adamw_grad_clip():
+    opt = AdamW(lr=1.0, grad_clip_norm=1.0, weight_decay=0.0)
+    p = {"w": jnp.zeros((3,))}
+    st_ = opt.init(p)
+    g = {"w": jnp.array([30.0, 40.0, 0.0])}  # norm 50
+    _, _, metrics = opt.update(g, st_, p)
+    assert metrics["grad_norm"] == pytest.approx(50.0)
+
+
+def test_adamw_bf16_state_dtype():
+    opt = AdamW(state_dtype="bfloat16")
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st_ = opt.init(p)
+    assert st_.m["w"].dtype == jnp.bfloat16
+
+
+def test_schedule_shape():
+    s0 = float(warmup_cosine(jnp.asarray(0), 10, 100))
+    s10 = float(warmup_cosine(jnp.asarray(10), 10, 100))
+    s100 = float(warmup_cosine(jnp.asarray(100), 10, 100))
+    assert s0 == 0.0 and abs(s10 - 1.0) < 1e-6 and s100 == pytest.approx(0.1)
+
+
+# ------------------------------------------------------------------- data
+
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=64, seq_len=32, global_batch=8)
+    ds = SyntheticDataset(cfg)
+    b1, b2 = ds.batch(3), ds.batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # shards partition the batch deterministically and differ
+    s0 = ds.batch(3, shard=0, n_shards=2)
+    s1 = ds.batch(3, shard=1, n_shards=2)
+    assert s0["tokens"].shape == (4, 32)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    # labels are next tokens
+    b = ds.batch(0)
+    full = ds.batch(0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], full["tokens"][:, 1:])
+
+
+def test_data_markov_is_predictable():
+    cfg = DataConfig(vocab_size=64, seq_len=64, global_batch=4,
+                     temperature=0.2)
+    assert loss_floor(cfg) < 0.7 * math.log(64)
+
+
+def test_prefetcher():
+    cfg = DataConfig(vocab_size=32, seq_len=16, global_batch=2)
+    ds = SyntheticDataset(cfg)
+    pf = Prefetcher(ds, start_step=5)
+    step, b = next(pf)
+    assert step == 5 and b["tokens"].shape == (2, 16)
+    step, _ = next(pf)
+    assert step == 6
+    pf.close()
+
+
+# ------------------------------------------------------------- checkpoint
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    for s in (1, 2, 3):
+        ck.save(s, jax.tree.map(lambda x: x * s, tree))
+    assert ck.list_steps() == [2, 3]  # keep=2 gc'd step 1
+    restored, step = ck.restore(tree)
+    assert step == 3
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) * 3)
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.ones((128, 128))}
+    ck.save(7, tree, blocking=False)
+    ck.wait()
+    r, s = ck.restore(tree)
+    assert s == 7
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.ones((8,))}
+    path = ck.save(1, tree)
+    shard = os.path.join(path, "shard_0.npz")
+    data = dict(np.load(shard))
+    data["w"][0] = 99.0
+    np.savez(shard, **data)
+    with pytest.raises(IOError):
+        ck.restore(tree)
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.ones(3)})
+    with pytest.raises(KeyError):
+        ck.restore({"a": jnp.ones(3), "new": jnp.ones(2)})
+
+
+# ------------------------------------------------------------------ fault
+
+
+def test_heartbeat_monitor():
+    t = [0.0]
+    hb = HeartbeatMonitor(4, timeout_s=10, clock=lambda: t[0])
+    t[0] = 5.0
+    hb.beat(0)
+    hb.beat(1)
+    t[0] = 12.0
+    assert set(hb.dead()) == {2, 3}
+    assert set(hb.alive()) == {0, 1}
+
+
+@given(lost=st.integers(0, 200))
+@settings(max_examples=40, deadline=None)
+def test_plan_remesh_preserves_model_axis(lost):
+    avail = 512 - lost
+    plan = plan_remesh((2, 16, 16), ("pod", "data", "model"), avail)
+    assert plan.new_shape[-1] == 16
+    assert math.prod(plan.new_shape) <= avail
+    # greedy: uses at least model*floor(avail/model) - model hosts
+    assert math.prod(plan.new_shape) >= (avail // 16) * 16 - 16
+
+
+def test_plan_remesh_too_few_hosts():
+    with pytest.raises(RuntimeError):
+        plan_remesh((16, 16), ("data", "model"), 15)
+
+
+def test_straggler_monitor_flags_outlier():
+    sm = StragglerMonitor(warmup=5)
+    for _ in range(20):
+        assert not sm.observe(1.0 + np.random.default_rng(0).normal() * 0)
+    assert sm.observe(10.0)          # 10x step time -> straggler
+    assert not sm.observe(1.0)       # healthy again
+    assert len(sm.flagged) == 1
+
+
+def test_checkpoint_cadence_reasonable():
+    c = checkpoint_cadence_steps(n_hosts=1024, save_cost_s=60,
+                                 step_time_s=10)
+    assert 10 <= c <= 10_000
+
+
+# ------------------------------------------------- gradient compression
+
+
+def test_int8_ef_compression_unbiased_over_time():
+    """Error feedback: accumulated compressed grads converge to the true sum."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)) * 1e-3)}
+    ef = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), g)
+    total = jnp.zeros((64,))
+    for _ in range(50):
+        cg, ef = compress_grads_ef(g, ef)
+        total = total + cg["w"]
+    true = 50 * g["w"]
+    rel = float(jnp.linalg.norm(total - true) / jnp.linalg.norm(true))
+    assert rel < 0.02, rel

@@ -1,0 +1,154 @@
+"""Property-based tests (hypothesis) for the topology layer's invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DEFAULT_SWITCH,
+    Dragonfly,
+    MPHX,
+    MultiPlaneFatTree,
+    ThreeTierFatTree,
+    cost_report,
+)
+
+
+dims_st = st.lists(st.integers(2, 12), min_size=1, max_size=3).map(tuple)
+planes_st = st.integers(1, 8)
+p_st = st.integers(1, 16)
+
+
+@given(n=planes_st, p=p_st, dims=dims_st)
+@settings(max_examples=80, deadline=None)
+def test_eq1_nic_count(n, p, dims):
+    """Eq. 1: N = p * prod(D_i)."""
+    t = MPHX(n=n, p=p, dims=dims)
+    assert t.n_nics == p * math.prod(dims)
+    assert t.n_switches == n * math.prod(dims)
+
+
+@given(n=planes_st, D=st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_eq2_balanced_max_scale(n, D):
+    """Eq. 2: N_max = (nk/(D+1))^(D+1), and the balanced instance achieves it
+    within the radix budget."""
+    k = 64
+    side = n * k // (D + 1)
+    if side < 2:
+        return
+    t = MPHX.balanced(n=n, k=k, D=D)
+    assert t.n_nics == MPHX.max_scale(n, k, D) == side ** (D + 1)
+    # balanced config exactly saturates the broken-out radix when divisible
+    assert t.radix_used == side + D * (side - 1)
+    assert t.radix_used <= n * k
+
+
+@given(n=planes_st, p=p_st, dims=dims_st)
+@settings(max_examples=60, deadline=None)
+def test_optics_even_and_consistent(n, p, dims):
+    t = MPHX(n=n, p=p, dims=dims)
+    assert t.n_optics % 2 == 0
+    assert t.n_optics == sum(lc.transceivers for lc in t.link_classes())
+    # every optical link has exactly 2 transceivers
+    assert t.n_optics == 2 * sum(lc.count for lc in t.link_classes())
+
+
+@given(n=planes_st, p=p_st, dims=dims_st)
+@settings(max_examples=60, deadline=None)
+def test_diameter_vs_avg_hops(n, p, dims):
+    t = MPHX(n=n, p=p, dims=dims)
+    assert 2 <= t.avg_hops() <= t.diameter
+    assert t.diameter == 2 + len([d for d in dims if d > 1])
+
+
+@given(n=planes_st, p=p_st, dims=dims_st)
+@settings(max_examples=30, deadline=None)
+def test_graph_matches_analytics(n, p, dims):
+    """Explicit graph: link totals, degree, diameter agree with closed forms."""
+    t = MPHX(n=n, p=p, dims=dims)
+    if t.switches_per_plane > 400:
+        return
+    g = t.build_graph()
+    per_plane_links = sum(lc.count for lc in t.link_classes()
+                          if lc.tier.startswith("dim")) / n
+    assert abs(g.total_links() - per_plane_links) < 1e-6
+    if t.switches_per_plane > 1:
+        assert g.switch_diameter() == t.diameter - 2
+
+
+@given(n=planes_st, p=p_st, dims=dims_st)
+@settings(max_examples=60, deadline=None)
+def test_cost_positive_and_additive(n, p, dims):
+    t = MPHX(n=n, p=p, dims=dims)
+    try:
+        rep = cost_report(t)
+    except KeyError:
+        return  # port speed without a listed transceiver price
+    assert rep.total_usd > 0
+    assert rep.total_usd == pytest.approx(rep.switches_usd + rep.optics_usd)
+    # copper access strictly reduces optics cost
+    t.access_copper = True
+    rep2 = cost_report(t)
+    assert rep2.optics_usd < rep.optics_usd
+    assert rep2.n_optics < rep.n_optics
+
+
+@given(st.integers(1, 8).filter(lambda n: 65536 % (n * 64 // 2) == 0))
+@settings(max_examples=8, deadline=None)
+def test_more_planes_fewer_switches_mpft(n):
+    """More planes (finer breakout) -> fewer physical switches for the same
+    NIC count in the 2-layer multi-plane Fat-Tree (§2 motivation)."""
+    try:
+        t = MultiPlaneFatTree(n=n, nics=65_536)
+    except ValueError:
+        return
+    t8 = MultiPlaneFatTree(n=8, nics=65_536)
+    assert t8.n_switches <= t.n_switches
+
+
+@given(n=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=4, deadline=None)
+def test_mphx_planes_monotone_cost(n):
+    """Paper §4: 'as the number of network planes increases, the MPHX topology
+    progressively demonstrates superior cost-effectiveness' — verified on the
+    Table-2 family."""
+    rows = {1: MPHX(n=1, p=16, dims=(16, 16, 16)),
+            2: MPHX(n=2, p=41, dims=(41, 41)),
+            4: MPHX(n=4, p=86, dims=(86, 9), links_per_dim=(85, 85)),
+            8: MPHX(n=8, p=256, dims=(256,))}
+    costs = {k: cost_report(v).per_nic_usd for k, v in rows.items()}
+    ordered = sorted(costs)
+    for a, b in zip(ordered, ordered[1:]):
+        assert costs[b] < costs[a]
+
+
+def test_radix_infeasible_raises():
+    t = MPHX(n=1, p=40, dims=(40, 40))  # radix 40+39+39=118 > 64
+    with pytest.raises(ValueError):
+        t.validate(DEFAULT_SWITCH)
+
+
+def test_breakout_beyond_max_ports_raises():
+    with pytest.raises(ValueError):
+        DEFAULT_SWITCH.radix_at(100.0)  # would need radix 1024 > 512
+
+
+@given(p=st.integers(1, 32), a=st.integers(2, 32), h=st.integers(1, 16),
+       frac=st.floats(0.1, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_dragonfly_counts(p, a, h, frac):
+    gmax = a * h + 1
+    g = max(2, int(gmax * frac))
+    if (g * a * h) % 2:
+        g -= 1
+    if g < 2:
+        return
+    t = Dragonfly(p=p, a=a, h=h, groups=g)
+    assert t.n_nics == p * a * g
+    assert t.n_switches == a * g
+    # link endpoint conservation: access + 2*(local+global) port usage
+    local = g * a * (a - 1) // 2
+    glob = g * a * h // 2
+    assert sum(lc.count for lc in t.link_classes()) == t.n_nics + local + glob
