@@ -23,6 +23,7 @@ if os.environ.get("_MPHX_DEMO_CHILD") != "1":
 sys.path.insert(0, SRC)
 
 import jax  # noqa: E402
+from repro.compat import shard_map
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
@@ -39,7 +40,7 @@ def device_demo():
     x = jnp.linspace(-1, 1, 8 * 1024 * 4).reshape(8, 1024, 4)
 
     def run(fn, in_spec=P("data", None, None)):
-        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_spec,
+        return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_spec,
                                      out_specs=in_spec, check_vma=False))(x)
 
     oracle = run(lambda v: jax.lax.psum(v, "model"))
@@ -53,11 +54,11 @@ def device_demo():
         out = run(fn)
         err = float(jnp.abs(out - oracle).max())
         print(f"  {name:36s} max|err| = {err:.2e}")
-    h = jax.jit(jax.shard_map(
+    h = jax.jit(shard_map(
         lambda v: hierarchical_psum(v, ("data", "model"), split_axis=1),
         mesh=mesh, in_specs=P(None, None, None), out_specs=P(None, None, None),
         check_vma=False))(x)
-    o2 = jax.jit(jax.shard_map(
+    o2 = jax.jit(shard_map(
         lambda v: jax.lax.psum(v, ("data", "model")), mesh=mesh,
         in_specs=P(None, None, None), out_specs=P(None, None, None),
         check_vma=False))(x)

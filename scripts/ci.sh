@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Single CI gate: install deps (unless SKIP_INSTALL=1) and run the tier-1
+# suite from ROADMAP.md.  Usage:  ./scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${SKIP_INSTALL:-0}" != "1" ]]; then
+    python -m pip install -q -r requirements.txt
+    # dev extras (hypothesis) are optional — the suite falls back to
+    # tests/_hypothesis_shim.py if this fails (e.g. offline)
+    python -m pip install -q -r requirements-dev.txt || \
+        python -m pip install -q pytest
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,56 @@
+"""JAX version compatibility shims.
+
+``jax.shard_map`` became a top-level API (with ``check_vma``) after 0.4.x;
+older releases expose ``jax.experimental.shard_map.shard_map`` (with
+``check_rep``).  Import :func:`shard_map` from here everywhere so the repo
+runs on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name) -> int:
+    """Static mesh-axis size from inside ``shard_map``.
+
+    ``jax.lax.axis_size`` arrived after 0.4.x; there, ``jax.core.axis_frame``
+    already returns the bound axis size as a python int.
+    """
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    import jax.core as jc
+
+    return jc.axis_frame(axis_name)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: newer jax returns a dict,
+    0.4.x returns a one-element list of dicts (one per program)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
+def set_mesh(mesh):
+    """Context manager binding the ambient mesh: ``jax.sharding.set_mesh``
+    where it exists, else the 0.4.x idiom ``with mesh:``."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """Version-portable ``shard_map`` (``check_vma`` maps to the old
+    ``check_rep`` on jax < 0.5)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -8,8 +8,11 @@ from .fattree import MultiPlaneFatTree, ThreeTierFatTree
 from .dragonfly import Dragonfly, DragonflyPlus, frontier_flattening_example
 from .cost import (CostModel, CostReport, DEFAULT_COST, PAPER_TABLE2,
                    cost_report, table2, table2_topologies)
-from .planes import SprayConfig, split_chunks, spray_completion_time
-from . import netsim, routing
+from .planes import (SprayConfig, plane_chunk_fractions, split_chunks,
+                     spray_completion_time)
+from .routing_vec import (ArrayLinkLoads, DemandArrays, EdgeIndex,
+                          VectorizedHyperXRouter, demands_from_dict)
+from . import netsim, routing, routing_vec
 
 __all__ = [
     "LinkClass", "SwitchGraph", "SwitchModel", "Topology", "DEFAULT_SWITCH",
@@ -18,6 +21,9 @@ __all__ = [
     "Dragonfly", "DragonflyPlus", "frontier_flattening_example",
     "CostModel", "CostReport", "DEFAULT_COST", "PAPER_TABLE2",
     "cost_report", "table2", "table2_topologies",
-    "SprayConfig", "split_chunks", "spray_completion_time",
-    "netsim", "routing",
+    "SprayConfig", "plane_chunk_fractions", "split_chunks",
+    "spray_completion_time",
+    "ArrayLinkLoads", "DemandArrays", "EdgeIndex", "VectorizedHyperXRouter",
+    "demands_from_dict",
+    "netsim", "routing", "routing_vec",
 ]

@@ -27,6 +27,19 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
+
+def plane_chunk_count(size: int, n_planes: int) -> int:
+    """Number of per-plane chunks a sprayed collective splits into: the
+    largest ``n <= n_planes`` dividing ``size`` evenly, or 1 (no split).
+    Shared by :func:`multiplane_psum` / :func:`multiplane_all_gather` and by
+    :mod:`repro.experiments.scenarios` to size collective chunk schedules."""
+    n = min(n_planes, size)
+    if size % n:
+        return 1
+    return n
+
 
 def multiplane_psum(x, axis_name: str, n_planes: int = 8, split_axis: int = 0):
     """All-reduce as ``n_planes`` independent chunk all-reduces.
@@ -37,10 +50,7 @@ def multiplane_psum(x, axis_name: str, n_planes: int = 8, split_axis: int = 0):
     compute; XLA may also fuse them back together — the decomposition is a
     scheduling hint, not a semantic change.
     """
-    size = x.shape[split_axis]
-    n = min(n_planes, size)
-    if size % n:
-        n = 1
+    n = plane_chunk_count(x.shape[split_axis], n_planes)
     if n == 1:
         return lax.psum(x, axis_name)
     chunks = jnp.split(x, n, axis=split_axis)
@@ -55,7 +65,7 @@ def decomposed_psum(x, axis_name: str, split_axis: int = 0):
     scheduler separately (overlap the all-gather with downstream compute).
     Requires ``x.shape[split_axis]`` divisible by the axis size.
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if x.shape[split_axis] % n:
         return lax.psum(x, axis_name)
     scattered = lax.psum_scatter(x, axis_name, scatter_dimension=split_axis,
@@ -74,7 +84,7 @@ def hierarchical_psum(x, axis_names: Sequence[str], split_axis: int = 0):
     if len(axis_names) == 1:
         return decomposed_psum(x, axis_names[0], split_axis)
     a0 = axis_names[0]
-    n = lax.axis_size(a0)
+    n = axis_size(a0)
     if x.shape[split_axis] % n:
         # fall back: reduce this axis whole, recurse on the rest
         return hierarchical_psum(lax.psum(x, a0), axis_names[1:], split_axis)
@@ -88,10 +98,7 @@ def multiplane_all_gather(x, axis_name: str, n_planes: int = 8,
                           gather_axis: int = 0, chunk_axis: int = -1):
     """All-gather with the payload chunk-split over planes."""
     ca = chunk_axis % x.ndim
-    size = x.shape[ca]
-    n = min(n_planes, size)
-    if size % n:
-        n = 1
+    n = plane_chunk_count(x.shape[ca], n_planes)
     if n == 1:
         return lax.all_gather(x, axis_name, axis=gather_axis, tiled=True)
     chunks = jnp.split(x, n, axis=ca)

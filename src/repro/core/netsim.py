@@ -87,16 +87,105 @@ def uniform_throughput_fraction(topo: Topology) -> float:
 
 
 def adversarial_throughput_fraction(topo: Topology, mode: str = "minimal",
-                                    dim: int = 0) -> float:
-    """Neighbor-shift adversarial pattern (MPHX only — the §5.2 scenario)."""
+                                    dim: int = 0,
+                                    engine: str = "array") -> float:
+    """Neighbor-shift adversarial pattern (MPHX only — the §5.2 scenario).
+
+    ``engine="array"`` (default) runs the batched routing engine.  For
+    ``minimal`` it matches the legacy dict engine whenever the legacy
+    router enumerates all orderings (m! <= 24 mismatched-dim orderings —
+    always true here, neighbor shift has m = 1); ``valiant`` additionally
+    requires <= 16 deroutes per pair or the legacy engine subsamples;
+    ``adaptive`` is the parallel-UGAL relaxation, not the sequential
+    greedy.  Pass ``engine="dict"`` for the exact legacy behaviour.
+    """
     if not isinstance(topo, MPHX):
         raise TypeError("adversarial model implemented for MPHX")
+    offered = topo.nic_bw_gbps
+    if engine == "array":
+        from .routing_vec import VectorizedHyperXRouter, neighbor_shift_demands
+
+        ll = VectorizedHyperXRouter(topo).route(
+            neighbor_shift_demands(topo, offered, dim), mode=mode)
+        return ll.saturation_throughput(offered)
     from .routing import HyperXRouter, neighbor_shift_traffic
 
-    offered = topo.nic_bw_gbps
     router = HyperXRouter(topo)
     ll = router.route(neighbor_shift_traffic(topo, offered, dim), mode=mode)
     return ll.saturation_throughput(offered)
+
+
+def pattern_throughput(topo: MPHX, demands, mode: str = "adaptive",
+                       backend: str = "auto") -> dict:
+    """Saturation throughput of one :class:`~.routing_vec.DemandArrays`
+    traffic matrix on one plane, via the batched engine."""
+    from .routing_vec import VectorizedHyperXRouter
+
+    ll = VectorizedHyperXRouter(topo, backend=backend).route(demands, mode)
+    return {
+        "max_util": ll.max_utilization(),
+        "mean_util": ll.mean_utilization(),
+        "throughput_fraction": ll.saturation_throughput(),
+        "total_load_gbps": ll.total_load(),
+    }
+
+
+def latency_under_load(topo: Topology, utilization: float,
+                       msg_bytes: float = 4096,
+                       net: NetParams = DEFAULT_NET) -> float:
+    """Average message latency at a given bottleneck utilization.
+
+    Flow-level M/M/1-style queueing approximation: each switch hop's service
+    time inflates by ``rho / (1 - rho)``.  Saturated (util >= 1) returns inf.
+    """
+    if utilization >= 1.0:
+        return math.inf
+    base = avg_latency(topo, msg_bytes, net)
+    sw_hops = max(topo.avg_hops() - 2.0, 0.0)
+    rho = max(utilization, 0.0)
+    return base + sw_hops * net.t_switch * rho / (1.0 - rho)
+
+
+def load_sweep(topo: MPHX, demand_builder, mode: str = "adaptive",
+               load_fractions: "list[float]" = (0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
+               msg_bytes: float = 4096, backend: str = "auto",
+               net: NetParams = DEFAULT_NET) -> "list[dict]":
+    """Latency/throughput vs offered load for one traffic scenario.
+
+    ``demand_builder(topo, offered_per_nic_gbps) -> DemandArrays``.  The
+    per-link utilizations scale linearly with offered load for ``minimal``/
+    ``valiant`` (fixed path spread); ``adaptive`` re-routes at every level,
+    so each level is simulated independently.
+    """
+    from .routing_vec import VectorizedHyperXRouter
+
+    router = VectorizedHyperXRouter(topo, backend=backend)
+    rows = []
+    base_ll = None
+    for frac in load_fractions:
+        offered = frac * topo.nic_bw_gbps
+        if frac == 0:
+            max_util = 0.0
+        elif mode == "adaptive" or base_ll is None:
+            ll = router.route(demand_builder(topo, offered), mode)
+            if mode != "adaptive":
+                base_ll, base_frac = ll, frac
+            max_util = ll.max_utilization()
+        else:
+            max_util = base_ll.max_utilization() * frac / base_frac
+        rows.append({
+            "offered_fraction": frac,
+            "offered_per_nic_gbps": offered,
+            "max_util": round(max_util, 6),
+            "throughput_fraction":
+                1.0 if max_util == 0 else round(min(1.0, 1.0 / max_util), 6),
+            "delivered_fraction": round(min(frac, frac / max_util)
+                                        if max_util > 0 else frac, 6),
+            "latency_us": (round(latency_under_load(topo, max_util,
+                                                    msg_bytes, net) * 1e6, 3)
+                           if max_util < 1.0 else None),
+        })
+    return rows
 
 
 # ----------------------------------------------------------------------------

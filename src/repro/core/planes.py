@@ -45,6 +45,19 @@ def split_chunks(total_bytes: int, cfg: SprayConfig) -> list[int]:
     return per_plane
 
 
+def plane_chunk_fractions(total_bytes: int, cfg: SprayConfig) -> list[float]:
+    """Fraction of a sprayed flow's bytes carried by each plane.
+
+    With perfect spray every entry is 1/n; small flows round to whole chunks,
+    so early planes carry more.  The *max* entry scales per-plane offered
+    load when a chunk schedule (collective) is mapped onto one plane's
+    fabric — see :mod:`repro.experiments.scenarios`.
+    """
+    per_plane = split_chunks(total_bytes, cfg)
+    return [b / total_bytes for b in per_plane] if total_bytes else \
+        [0.0] * cfg.n_planes
+
+
 def spray_completion_time(total_bytes: int, nic_bw_gbps: float,
                           cfg: SprayConfig,
                           plane_skew: list[float] | None = None) -> float:

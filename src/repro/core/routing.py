@@ -215,6 +215,28 @@ def bit_complement_traffic(topo: MPHX, offered_per_nic_gbps: float
     return demands
 
 
+def route_demands(topo: MPHX, demands: dict[tuple[int, int], float],
+                  mode: str = "minimal", engine: str = "dict",
+                  backend: str = "auto", seed: int = 0):
+    """Route a demand dict with either engine.
+
+    ``engine="dict"`` — the per-flow Python reference implementation above.
+    ``engine="array"`` — the batched :mod:`repro.core.routing_vec` engine
+    (same link loads for ``minimal``/``valiant``; parallel-UGAL relaxation
+    for ``adaptive``).  Returns an object with the shared LinkLoads
+    interface (``max_utilization`` / ``mean_utilization`` /
+    ``saturation_throughput``).
+    """
+    if engine == "dict":
+        return HyperXRouter(topo, seed=seed).route(demands, mode=mode)
+    if engine == "array":
+        from .routing_vec import VectorizedHyperXRouter, demands_from_dict
+
+        router = VectorizedHyperXRouter(topo, backend=backend)
+        return router.route(demands_from_dict(demands), mode=mode)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
 def minimal_vs_adaptive_report(topo: MPHX, offered_per_nic_gbps: float = 200.0,
                                dim: int = 0) -> dict:
     """Quantify §5.2: adjacent-switch traffic throughput, minimal vs DAL."""

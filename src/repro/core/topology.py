@@ -245,6 +245,19 @@ class SwitchGraph:
     def multiplicity(self, u: int, v: int) -> float:
         return self.adj[u].get(v, 0.0)
 
+    def directed_edge_arrays(self):
+        """All directed edges as parallel lists ``(u, v, multiplicity)`` —
+        the multigraph in array form, for structural cross-checks against
+        the analytic edge-slot tensor (tests/test_experiments.py) and for
+        generic array consumers."""
+        us, vs, mult = [], [], []
+        for u, nbrs in enumerate(self.adj):
+            for v, m in nbrs.items():
+                us.append(u)
+                vs.append(v)
+                mult.append(m)
+        return us, vs, mult
+
     def bfs_dist(self, src: int) -> list[int]:
         dist = [-1] * self.n_switches
         dist[src] = 0

@@ -1,0 +1,25 @@
+"""repro.experiments — the paper's deferred §6 evaluation, as a subsystem.
+
+Builds on the batched array routing engine (:mod:`repro.core.routing_vec`)
+to evaluate whole traffic matrices in one shot:
+
+* :mod:`~repro.experiments.scenarios` — named traffic scenarios (synthetic
+  patterns + collective chunk schedules) with a registry;
+* :mod:`~repro.experiments.sweep`     — suite runners: Table-2 topology
+  comparison, latency/throughput-vs-load sweeps;
+* :mod:`~repro.experiments.artifacts` — JSON + markdown artifact writers;
+* :mod:`~repro.experiments.run`       — the CLI
+  (``python -m repro.experiments.run --suite table2``).
+"""
+
+from .scenarios import SCENARIOS, Scenario, available_scenarios, get_scenario
+from .sweep import (SWEEP_TOPOLOGIES, run_sweep_suite, run_table2_suite,
+                    sweep_topology)
+from .artifacts import markdown_table, write_json, write_markdown
+
+__all__ = [
+    "SCENARIOS", "Scenario", "available_scenarios", "get_scenario",
+    "SWEEP_TOPOLOGIES", "run_sweep_suite", "run_table2_suite",
+    "sweep_topology",
+    "markdown_table", "write_json", "write_markdown",
+]

@@ -1,0 +1,72 @@
+"""CLI for the experiment suites.
+
+Examples::
+
+    PYTHONPATH=src python -m repro.experiments.run --suite table2
+    PYTHONPATH=src python -m repro.experiments.run --suite sweep \
+        --topos mphx-2p-8x8 mphx-4p-86x9 --scenarios uniform neighbor_shift \
+        --modes minimal adaptive --loads 0.25 0.5 1.0
+    PYTHONPATH=src python -m repro.experiments.run --suite all
+
+Artifacts land in ``--out`` (default ``results/experiments``):
+``table2.json`` / ``table2.md`` and ``sweep.json`` / ``sweep.md``; the JSON
+schema is documented in :mod:`repro.experiments.artifacts` and
+``docs/experiments.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .scenarios import SCENARIOS
+from .sweep import (DEFAULT_OUTDIR, SWEEP_TOPOLOGIES, run_sweep_suite,
+                    run_table2_suite)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.experiments.run",
+        description="MPHX experiment sweeps (paper §6 evaluation)")
+    p.add_argument("--suite", choices=["table2", "sweep", "all"],
+                   default="all")
+    p.add_argument("--out", default=DEFAULT_OUTDIR,
+                   help="artifact directory (default results/experiments)")
+    p.add_argument("--topos", nargs="+", choices=sorted(SWEEP_TOPOLOGIES),
+                   default=None, help="sweep topologies "
+                   "(default: the two small presets)")
+    p.add_argument("--scenarios", nargs="+", choices=sorted(SCENARIOS),
+                   default=None, help="scenarios (default: all applicable)")
+    p.add_argument("--modes", nargs="+",
+                   choices=["minimal", "valiant", "adaptive"], default=None,
+                   help="routing modes (default: minimal + scenario default)")
+    p.add_argument("--loads", nargs="+", type=float,
+                   default=[0.1, 0.25, 0.5, 0.75, 0.9, 1.0],
+                   help="offered load fractions of NIC bandwidth")
+    p.add_argument("--msg-bytes", type=float, default=4096)
+    p.add_argument("--backend", choices=["auto", "numpy", "jax"],
+                   default="auto")
+    p.add_argument("--collective-mb", type=float, default=256.0,
+                   help="all-reduce payload for the table2 suite")
+    return p
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.suite in ("table2", "all"):
+        payload = run_table2_suite(args.out, args.collective_mb,
+                                   args.msg_bytes)
+        print(f"table2: {len(payload['rows'])} topologies -> "
+              f"{args.out}/table2.json, {args.out}/table2.md")
+    if args.suite in ("sweep", "all"):
+        payload = run_sweep_suite(
+            args.out, topo_names=args.topos, scenario_names=args.scenarios,
+            modes=args.modes, load_fractions=tuple(args.loads),
+            msg_bytes=args.msg_bytes, backend=args.backend)
+        print(f"sweep: {len(payload['rows'])} rows -> "
+              f"{args.out}/sweep.json, {args.out}/sweep.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

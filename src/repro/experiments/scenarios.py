@@ -1,0 +1,169 @@
+"""Traffic scenario registry for the sweep runner.
+
+A *scenario* names a switch-level traffic matrix builder over one MPHX
+plane: synthetic patterns (the FatPaths/RailX evaluation style) plus
+collective chunk schedules whose per-plane load derives from the paper's
+NIC spraying model (:mod:`repro.core.planes`) and the JAX chunk
+decomposition (:func:`repro.core.collectives.plane_chunk_count`).
+
+Every builder has the signature ``builder(topo, offered_per_nic_gbps) ->
+DemandArrays`` where ``offered_per_nic_gbps`` is the *injection* rate per
+NIC across all planes; the builder internally takes one plane's share.
+
+Docs: ``docs/experiments.md`` lists every scenario with its CLI invocation
+and the artifact schema it emits.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.core.collectives import plane_chunk_count
+from repro.core.hyperx import MPHX
+from repro.core.planes import SprayConfig, plane_chunk_fractions
+from repro.core.routing_vec import (DemandArrays, bit_complement_demands,
+                                    hotspot_demands, neighbor_shift_demands,
+                                    ring_demands, transpose_demands,
+                                    uniform_demands)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named traffic scenario."""
+
+    name: str
+    kind: str                 # "synthetic" | "collective"
+    description: str
+    builder: Callable[[MPHX, float], DemandArrays]
+    default_mode: str = "adaptive"
+    # cheap precondition; None = applies everywhere.  Kept separate from
+    # the builder so applicability checks never materialize demand arrays.
+    requires: "Callable[[MPHX], bool] | None" = None
+
+    def applicable(self, topo: MPHX) -> bool:
+        return self.requires is None or self.requires(topo)
+
+
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    if scenario.name in SCENARIOS:
+        raise ValueError(f"duplicate scenario {scenario.name}")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: "
+            f"{', '.join(sorted(SCENARIOS))}") from None
+
+
+def available_scenarios(topo: MPHX | None = None) -> list[str]:
+    names = sorted(SCENARIOS)
+    if topo is None:
+        return names
+    return [n for n in names if SCENARIOS[n].applicable(topo)]
+
+
+# ---------------------------------------------------------------------------
+# Synthetic patterns
+# ---------------------------------------------------------------------------
+
+register(Scenario(
+    "uniform", "synthetic",
+    "Every NIC sprays uniformly over all other switches (best case; "
+    "bisection-bound).",
+    uniform_demands, default_mode="minimal"))
+
+register(Scenario(
+    "neighbor_shift", "synthetic",
+    "+1 shift along dimension 0 — the paper's §5.2 adversarial case: one "
+    "thin direct trunk per pair, minimal routing collapses, DAL recovers.",
+    neighbor_shift_demands))
+
+register(Scenario(
+    "bit_complement", "synthetic",
+    "Coordinate complement permutation (every dimension mismatched; "
+    "classic worst case for dimension-ordered routing).",
+    bit_complement_demands))
+
+register(Scenario(
+    "transpose", "synthetic",
+    "Swap the first two coordinates (requires dims[0] == dims[1]); "
+    "adversarial for dimension-ordered minimal routing.",
+    transpose_demands,
+    requires=lambda t: t.D >= 2 and t.dims[0] == t.dims[1]))
+
+register(Scenario(
+    "hotspot", "synthetic",
+    "50% of every switch's load targets one hot switch, rest uniform "
+    "(incast around the hot spot).",
+    hotspot_demands))
+
+
+# ---------------------------------------------------------------------------
+# Collective chunk schedules (plane spraying from planes.py / collectives.py)
+# ---------------------------------------------------------------------------
+
+
+def _spray_imbalance(topo: MPHX, payload_bytes: int) -> float:
+    """Hottest plane's share of a sprayed collective, relative to perfect
+    1/n spray.  Whole-chunk rounding makes early planes carry more for
+    small payloads; the sweep charges the plane fabric at that factor."""
+    cfg = SprayConfig(n_planes=topo.n)
+    fracs = plane_chunk_fractions(payload_bytes, cfg)
+    return max(fracs) * topo.n
+
+
+def _collective_builder(pattern, payload_bytes: int = 1 << 20,
+                        ring_chunked: bool = False):
+    """Scale a pattern by the hottest plane's share of the chunk schedule.
+
+    ``ring_chunked``: a ring all-reduce moves ``payload/m`` per step
+    (m ring participants = switches per plane), so spray imbalance is
+    computed on the per-step chunk — small chunks spray poorly.  An
+    all-gather ring moves the full payload every step.
+    """
+
+    def build(topo: MPHX, offered_per_nic_gbps: float) -> DemandArrays:
+        d = pattern(topo, offered_per_nic_gbps)
+        step_bytes = payload_bytes
+        if ring_chunked:
+            step_bytes = max(payload_bytes // topo.switches_per_plane, 1)
+        # when the step payload does not chunk evenly over the planes the
+        # JAX decomposition issues ONE ordered collective (collectives.py),
+        # so a single plane carries each step in turn -> full n penalty
+        if plane_chunk_count(step_bytes, topo.n) == 1:
+            scale = float(topo.n)
+        else:
+            scale = _spray_imbalance(topo, step_bytes)
+        return DemandArrays(d.src, d.dst, d.gbps * scale)
+
+    return build
+
+
+register(Scenario(
+    "allreduce_ring", "collective",
+    "Steady-state link pattern of a ring all-reduce over switch-ordered "
+    "ranks; per-step chunk is payload/m, so the spray schedule is charged "
+    "on small chunks.",
+    _collective_builder(ring_demands, ring_chunked=True),
+    default_mode="minimal"))
+
+register(Scenario(
+    "allgather_ring", "collective",
+    "Ring all-gather steady-state pattern (same ring links as all-reduce "
+    "but the full payload moves every step, so spraying is near-perfect).",
+    _collective_builder(ring_demands), default_mode="minimal"))
+
+register(Scenario(
+    "alltoall", "collective",
+    "All-to-all chunk exchange — uniform all-pairs at full injection, "
+    "spray-chunked across planes (bisection-bound).",
+    _collective_builder(uniform_demands), default_mode="minimal"))

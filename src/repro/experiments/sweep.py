@@ -1,0 +1,165 @@
+"""Experiment suite runners.
+
+* :func:`run_table2_suite` — the paper's Table 2 cost/diameter comparison
+  across MPHX, multi-plane Fat-Tree, Dragonfly and Dragonfly+, joined with
+  the flow-level latency/throughput model (the §6 evaluation the paper
+  defers to future work).
+* :func:`run_sweep_suite` — latency/throughput-vs-load sweeps of every
+  registered traffic scenario over MPHX instances, computed with the
+  batched array routing engine.
+
+Both write JSON + markdown artifacts (see :mod:`~repro.experiments.artifacts`
+for the schema) and return the JSON payloads.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core import MPHX, PAPER_TABLE2, cost_report, table2_topologies
+from repro.core.netsim import (DEFAULT_NET, allreduce_time, avg_latency,
+                               load_sweep, uniform_throughput_fraction,
+                               zero_load_latency)
+from .artifacts import (artifact_payload, markdown_table, write_json,
+                        write_markdown)
+from .scenarios import SCENARIOS, get_scenario
+
+DEFAULT_OUTDIR = os.path.join("results", "experiments")
+
+# MPHX instances for routing sweeps (the non-HyperX Table-2 topologies have
+# no explicit switch graph; they are compared via the closed forms in the
+# table2 suite instead).
+SWEEP_TOPOLOGIES: dict[str, "MPHX"] = {
+    # small — fast, and exactly comparable against the legacy dict router
+    "mphx-2p-8x8": MPHX(n=2, p=8, dims=(8, 8)),
+    # medium — 4k NICs
+    "mphx-2p-16x16": MPHX(n=2, p=16, dims=(16, 16)),
+    # Table 2 row: 66,564 NICs, trunked dim 2
+    "mphx-4p-86x9": MPHX(n=4, p=86, dims=(86, 9), links_per_dim=(85, 85),
+                         name="4-Plane 2D HyperX"),
+    # Table 2 row: 65,536 NICs, single full-mesh dimension
+    "mphx-8p-256": MPHX(n=8, p=256, dims=(256,), name="8-Plane 1D HyperX"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Table 2 suite
+# ---------------------------------------------------------------------------
+
+
+def run_table2_suite(outdir: str = DEFAULT_OUTDIR,
+                     collective_mb: float = 256.0,
+                     msg_bytes: float = 4096) -> dict:
+    """Reproduce paper Table 2 (§4) and extend it with the flow-level
+    latency / throughput / collective model (§6)."""
+    rows = []
+    paper = {name: (n, ns, no, usd) for name, n, ns, no, usd in PAPER_TABLE2}
+    for topo in table2_topologies():
+        rep = cost_report(topo)
+        ar = allreduce_time(topo, collective_mb * 2**20, net=DEFAULT_NET)
+        row = {
+            "topology": topo.name,
+            "N": topo.n_nics,
+            "N_s": topo.n_switches,
+            "N_o": rep.n_optics,
+            "cost_per_nic_usd": round(rep.per_nic_usd, 2),
+            "paper_cost_per_nic_usd": paper.get(topo.name, (0, 0, 0, None))[3],
+            "diameter": topo.diameter,
+            "avg_hops": round(topo.avg_hops(), 3),
+            "zero_load_latency_us":
+                round(zero_load_latency(topo, msg_bytes) * 1e6, 3),
+            "avg_latency_us": round(avg_latency(topo, msg_bytes) * 1e6, 3),
+            "uniform_throughput": round(uniform_throughput_fraction(topo), 3),
+            f"allreduce_{int(collective_mb)}MB_ms": round(ar.total_s * 1e3, 3),
+            "allreduce_algo": ar.algo,
+        }
+        if row["paper_cost_per_nic_usd"]:
+            row["cost_matches_paper"] = (
+                abs(rep.per_nic_usd - row["paper_cost_per_nic_usd"]) < 3.0)
+        rows.append(row)
+    payload = artifact_payload(
+        "table2",
+        {"collective_mb": collective_mb, "msg_bytes": msg_bytes,
+         "cost_note": "paper §4 prices: $40k switch, 200G/$100 400G/$200 "
+                      "800G/$450 1.6T/$1200 optics"},
+        rows)
+    write_json(os.path.join(outdir, "table2.json"), payload)
+    write_markdown(
+        os.path.join(outdir, "table2.md"),
+        "Table 2 — topology cost & latency comparison (65K-NIC scale)",
+        [("", "Reproduces paper Table 2 (§4) and joins the flow-level "
+              "latency/throughput model (§6 future-work evaluation)."),
+         ("Comparison", markdown_table(rows))])
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# Load sweeps
+# ---------------------------------------------------------------------------
+
+
+def sweep_topology(topo: MPHX, scenario_names: "list[str] | None" = None,
+                   modes: "list[str] | None" = None,
+                   load_fractions=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
+                   msg_bytes: float = 4096,
+                   backend: str = "auto") -> list[dict]:
+    """Latency/throughput-vs-load rows for one MPHX instance."""
+    rows = []
+    for name in scenario_names or sorted(SCENARIOS):
+        sc = get_scenario(name)
+        if not sc.applicable(topo):
+            continue
+        mode_list = modes if modes is not None \
+            else list(dict.fromkeys(["minimal", sc.default_mode]))
+        for mode in mode_list:
+            t0 = time.perf_counter()
+            sweep = load_sweep(topo, sc.builder, mode=mode,
+                               load_fractions=load_fractions,
+                               msg_bytes=msg_bytes, backend=backend)
+            dt = time.perf_counter() - t0
+            for r in sweep:
+                rows.append({"topology": topo.name, "scenario": name,
+                             "kind": sc.kind, "mode": mode, **r,
+                             "sweep_wall_s": round(dt, 4)})
+    return rows
+
+
+def run_sweep_suite(outdir: str = DEFAULT_OUTDIR,
+                    topo_names: "list[str] | None" = None,
+                    scenario_names: "list[str] | None" = None,
+                    modes: "list[str] | None" = None,
+                    load_fractions=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
+                    msg_bytes: float = 4096,
+                    backend: str = "auto") -> dict:
+    """Sweep every (topology, scenario, mode, load) cell and write artifacts."""
+    names = topo_names or ["mphx-2p-8x8", "mphx-2p-16x16"]
+    all_rows = []
+    for tn in names:
+        topo = SWEEP_TOPOLOGIES[tn]
+        all_rows += sweep_topology(topo, scenario_names, modes,
+                                   load_fractions, msg_bytes, backend)
+    payload = artifact_payload(
+        "sweep",
+        {"topologies": names,
+         "scenarios": scenario_names or sorted(SCENARIOS),
+         "modes": modes or "per-scenario default + minimal",
+         "load_fractions": list(load_fractions),
+         "msg_bytes": msg_bytes, "backend": backend},
+        all_rows)
+    write_json(os.path.join(outdir, "sweep.json"), payload)
+    # markdown: one table per topology at the highest swept load
+    top_load = max(load_fractions)
+    sections = []
+    for tn in names:
+        topo = SWEEP_TOPOLOGIES[tn]
+        t_rows = [r for r in all_rows if r["topology"] == topo.name]
+        full = [r for r in t_rows if r["offered_fraction"] == top_load]
+        cols = ["scenario", "mode", "max_util", "throughput_fraction",
+                "delivered_fraction", "latency_us"]
+        sections.append(
+            (f"{topo.name} ({topo.n_nics} NICs) @ {top_load:g}x injection",
+             markdown_table(full, cols)))
+    write_markdown(os.path.join(outdir, "sweep.md"),
+                   "Latency / throughput vs offered load", sections)
+    return payload

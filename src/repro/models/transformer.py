@@ -13,6 +13,8 @@ from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
@@ -202,7 +204,7 @@ class DecoderLM:
             aux = lax.pmean(aux, plan.batch_axes)
             return y, aux
 
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             body, mesh=self.mesh,
             in_specs=(p_specs, x_spec),
             out_specs=(x_spec, P()),
@@ -231,7 +233,7 @@ class DecoderLM:
                                     fsdp_axis=plan.fsdp)
             return y, lax.pmean(aux, plan.batch_axes)
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=self.mesh, in_specs=(p_specs, x_spec),
             out_specs=(x_spec, P()), check_vma=False)(p, x)
 

@@ -1,0 +1,171 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The real library is preferred (``pip install -r requirements-dev.txt``); this
+shim keeps the property tests *running* — not skipped — in bare environments
+by sampling a fixed number of pseudo-random examples per test.  It implements
+only the API surface this repo uses:
+
+  * ``given(*strategies, **strategies)`` / ``settings(max_examples, deadline)``
+  * ``strategies.integers / floats / sampled_from / booleans / lists``
+  * strategy ``.map(f)`` and ``.filter(pred)``
+
+Examples are seeded from the wrapped test's name, so failures reproduce
+across runs.  Boundary values (min/max) are always tried first, which is
+where most of the real library's bug-finding power comes from for the
+invariants tested here.
+"""
+
+from __future__ import annotations
+
+import inspect
+import math
+import random
+import zlib
+from functools import wraps
+
+DEFAULT_MAX_EXAMPLES = 25
+_FILTER_ATTEMPTS = 1000
+
+
+class Strategy:
+    """A lazily-evaluated example generator.
+
+    ``draw(rng, i)`` returns the i-th example; indices 0.. hit boundary
+    values first when the strategy has natural boundaries.
+    """
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random, i: int):
+        return self._draw(rng, i)
+
+    def map(self, f):
+        return Strategy(lambda rng, i: f(self._draw(rng, i)))
+
+    def filter(self, pred):
+        def draw(rng, i):
+            x = self._draw(rng, i)
+            for _ in range(_FILTER_ATTEMPTS):
+                if pred(x):
+                    return x
+                x = self._draw(rng, rng.randrange(1 << 30))
+            raise ValueError("filter predicate rejected all examples")
+
+        return Strategy(draw)
+
+
+class strategies:  # noqa: N801 — mimics the ``hypothesis.strategies`` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        bounds = [min_value, max_value]
+
+        def draw(rng, i):
+            if i < len(bounds):
+                return bounds[i]
+            return rng.randint(min_value, max_value)
+
+        return Strategy(draw)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> Strategy:
+        bounds = [min_value, max_value,
+                  (min_value + max_value) / 2.0]
+
+        def draw(rng, i):
+            if i < len(bounds):
+                return bounds[i]
+            # log-uniform when the range spans decades, else uniform
+            if min_value > 0 and max_value / min_value > 100:
+                lo, hi = math.log(min_value), math.log(max_value)
+                return math.exp(rng.uniform(lo, hi))
+            return rng.uniform(min_value, max_value)
+
+        return Strategy(draw)
+
+    @staticmethod
+    def sampled_from(options) -> Strategy:
+        options = list(options)
+
+        def draw(rng, i):
+            if i < len(options):
+                return options[i]
+            return rng.choice(options)
+
+        return Strategy(draw)
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return strategies.sampled_from([False, True])
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int = 10) -> Strategy:
+        def draw(rng, i):
+            # cycle sizes so every length in [min_size, max_size] is hit
+            span = max_size - min_size + 1
+            size = min_size + (i % span) if i < 2 * span \
+                else rng.randint(min_size, max_size)
+            return [elements.draw(rng, rng.randrange(1 << 30))
+                    for _ in range(size)]
+
+        return Strategy(draw)
+
+
+st = strategies
+
+
+class settings:  # noqa: N801 — decorator, like hypothesis.settings
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, f):
+        f._shim_settings = self
+        return f
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test once per generated example (deterministic seed)."""
+
+    def decorate(f):
+        cfg = getattr(f, "_shim_settings", None)
+        n = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+
+        @wraps(f)
+        def wrapper(*args, **kwargs):
+            seed = zlib.crc32(f.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                gen_args = tuple(s.draw(rng, i) for s in arg_strategies)
+                gen_kw = {k: s.draw(rng, i) for k, s in kw_strategies.items()}
+                try:
+                    f(*args, *gen_args, **kwargs, **gen_kw)
+                except _Assumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"shim-hypothesis example #{i} failed: "
+                        f"args={gen_args} kwargs={gen_kw}") from e
+
+        # pytest must not see the generated parameters as fixtures: expose
+        # only the test's own (fixture) params in the wrapper's signature.
+        sig = inspect.signature(f)
+        params = list(sig.parameters.values())
+        params = params[len(arg_strategies):]
+        params = [p for p in params if p.name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+def assume(condition: bool) -> None:
+    """Degraded ``assume``: treat a failed assumption as a pass."""
+    if not condition:
+        raise _Assumption()
+
+
+class _Assumption(Exception):
+    pass

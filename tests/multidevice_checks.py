@@ -8,6 +8,7 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402
+from repro.compat import cost_analysis, set_mesh, shard_map
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
@@ -33,7 +34,7 @@ def test_collectives_match_psum():
     x = jnp.arange(8 * 16 * 4, dtype=jnp.float32).reshape(8, 16, 4) / 100.0
 
     def run(fn):
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             fn, mesh=mesh, in_specs=P("data", None, None),
             out_specs=P("data", None, None), check_vma=False))(x)
 
@@ -56,7 +57,7 @@ def test_collectives_match_psum():
     def h2(v):
         return hierarchical_psum(v, ("data", "model"), split_axis=1)
 
-    run2 = lambda fn: jax.jit(jax.shard_map(
+    run2 = lambda fn: jax.jit(shard_map(
         fn, mesh=mesh, in_specs=P(None, None, None),
         out_specs=P(None, None, None), check_vma=False))(x)
     err = float(jnp.abs(run2(h2) - run2(o2)).max())
@@ -104,7 +105,7 @@ def test_ep_moe_matches_dispatch():
 
     moe_p = params["layers"]["moe"]
     moe_p0 = jax.tree.map(lambda l: l[0], moe_p)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         y_ep, aux_ep = model._moe_ep(moe_p0, x)
     y_ref, aux_ref = moe_ffn_dispatch(moe_p0, x, cfg)
     # EP computes capacity per *local* shard; with capacity_factor=8 no
@@ -121,7 +122,7 @@ def test_ep_moe_matches_dispatch():
     run_ws = RunConfig(ep_moe=True, moe_weight_stationary=True)
     model_ws = DecoderLM(cfg, run_ws, mesh=mesh,
                          plan=MeshPlan(moe_ws=True))
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         y_ws, _ = model_ws._moe_ep(moe_p0, x)
     err = float(jnp.abs(y_ws - y_ref).max())
     check("moe_ep_weight_stationary", err < 1e-4, f"err={err:.2e}")
@@ -129,7 +130,7 @@ def test_ep_moe_matches_dispatch():
     # TP-f MoE (few-expert path): local dispatch + f-sharded experts
     run_tpf = RunConfig(ep_moe=False, moe_tp_f=True)
     model_tpf = DecoderLM(cfg, run_tpf, mesh=mesh, plan=MeshPlan())
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         y_tpf, _ = model_tpf._moe_tp_f(moe_p0, x)
     err = float(jnp.abs(y_tpf - y_ref).max())
     check("moe_tp_f", err < 1e-4, f"err={err:.2e}")
@@ -138,7 +139,7 @@ def test_ep_moe_matches_dispatch():
     # total loss differs only by the per-shard aux estimator * 0.01)
     tokens = jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0, 128)
     batch = {"tokens": tokens, "labels": tokens}
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         _, metr_mesh = jax.jit(model.loss)(params, batch)
     model0 = DecoderLM(cfg, RunConfig(ep_moe=False))
     _, metr_ref = jax.jit(model0.loss)(params, batch)
@@ -223,7 +224,7 @@ def test_mini_dryrun_multipod():
     lowered = step.lower(state_shapes, batch)
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     check("mini_dryrun_compiles", True,
           f"flops={cost.get('flops', 0):.2e}")
     # collectives exist only POST-partitioning: parse compiled HLO, not the

@@ -3,7 +3,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import MPHX, SprayConfig, split_chunks, spray_completion_time
 from repro.core.netsim import (

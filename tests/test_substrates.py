@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticDataset, \
     loss_floor
