@@ -316,6 +316,95 @@ def bench_vectorized():
          f"meets_10x_target={'yes' if speedup >= 10 else 'NO'}")
 
 
+# ------------------------------------------------------- graph routing ----
+
+
+def bench_graph_routing():
+    """Generic graph engine: cross-engine equivalence against the MPHX
+    array engine (minimal ECMP, 1e-9), timings for both, and routed
+    baseline topologies (the Table-2 comparison closed forms can't give).
+    Writes results/BENCH_graph_routing.json."""
+    from repro.core.dragonfly import Dragonfly, DragonflyPlus
+    from repro.core.fattree import MultiPlaneFatTree, ThreeTierFatTree
+    from repro.core.routing_graph import (GraphRouter, graph_shift_demands,
+                                          graph_uniform_demands)
+    from repro.core.routing_vec import (VectorizedHyperXRouter, get_backend,
+                                        uniform_demands)
+
+    record = {"schema_version": 1, "bench": "graph_routing",
+              "backend": get_backend("auto")[0]}
+
+    # cross-engine equivalence + timing on untrunked MPHX (equal per-dim
+    # multiplicity -> multiplicity-proportional ECMP == ordering ECMP)
+    eq = {}
+    for topo in (MPHX(n=2, p=8, dims=(8, 8)),
+                 MPHX(n=2, p=16, dims=(16, 16))):
+        d = uniform_demands(topo, 1600.0)
+        vec_router = VectorizedHyperXRouter(topo)
+        g_router = GraphRouter(topo)
+        ll_vec, t_vec = timed(lambda: vec_router.route(d, "minimal"))
+        ll_g, t_g = timed(lambda: g_router.route(d, "minimal"))
+        vd, gd = ll_vec.to_dict(), ll_g.to_dict()
+        keys = set(vd) | set(gd)
+        diff = max(abs(vd.get(k, 0.0) - gd.get(k, 0.0)) for k in keys)
+        eq[topo.name] = {
+            "traffic": "uniform", "mode": "minimal",
+            "max_abs_diff_gbps": diff, "n_edges": len(keys),
+            "array_engine_s": t_vec / 1e6, "graph_engine_s": t_g / 1e6,
+            "graph_over_array": t_g / t_vec,
+            "within_1e-9": bool(diff < 1e-9),
+        }
+        emit(f"graph/equivalence_{topo.name.replace(' ', '_')}", t_g,
+             f"max_abs_diff_gbps={diff:.3e};"
+             f"graph_over_array={t_g / t_vec:.1f}x;"
+             f"match={'yes' if diff < 1e-9 else 'NO'}")
+    record["equivalence_vs_array_engine"] = eq
+
+    # routed baselines: adversarial shift, minimal vs UGAL adaptive —
+    # the §6 cross-topology result closed forms cannot produce
+    baselines = [
+        ThreeTierFatTree(radix=8, nics=128, name="3-layer Fat-Tree (small)"),
+        MultiPlaneFatTree(n=2, nics=32, base_radix=4,
+                          name="2-Plane 2-layer Fat-Tree (small)"),
+        Dragonfly(p=2, a=4, h=2, groups=9, name="Dragonfly (small)"),
+        DragonflyPlus(p=2, leaves=4, spines=4, groups=8, global_per_spine=7,
+                      name="Dragonfly+ (small)"),
+    ]
+    rows = {}
+    for topo in baselines:
+        router = GraphRouter(topo)
+        shift = graph_shift_demands(topo, 1600.0)
+        out = {}
+        for mode in ("minimal", "valiant", "adaptive"):
+            ll, us = timed(lambda m=mode: router.route(shift, m))
+            out[mode] = {"max_util": ll.max_utilization(),
+                         "route_s": us / 1e6}
+        uni, us = timed(lambda: router.route(
+            graph_uniform_demands(topo, 1600.0), "minimal"))
+        out["uniform_minimal_max_util"] = uni.max_utilization()
+        gain = (out["minimal"]["max_util"]
+                / max(out["adaptive"]["max_util"], 1e-9))
+        out["adaptive_gain_on_shift"] = gain
+        rows[topo.name] = out
+        emit(f"graph/{topo.name.replace(' ', '_')}",
+             out["minimal"]["route_s"] * 1e6,
+             f"shift_minimal={out['minimal']['max_util']:.2f};"
+             f"shift_adaptive={out['adaptive']['max_util']:.2f};"
+             f"gain={gain:.2f}x")
+    record["routed_baselines"] = rows
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "BENCH_graph_routing.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    ok = all(v["within_1e-9"] for v in eq.values())
+    emit("graph/bench_artifact", 0.0,
+         f"wrote={os.path.relpath(path, os.path.join(out_dir, '..'))};"
+         f"cross_engine_1e-9={'yes' if ok else 'NO'}")
+
+
 # --------------------------------------------------- experiment suites ----
 
 
@@ -333,6 +422,7 @@ def bench_experiments():
 BENCHES = {
     "table2": bench_table2,
     "vectorized": bench_vectorized,
+    "graph": bench_graph_routing,
     "experiments": bench_experiments,
     "diameter": bench_diameter,
     "flattening": bench_flattening,

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Single CI gate: install deps (unless SKIP_INSTALL=1) and run the tier-1
-# suite from ROADMAP.md.  Usage:  ./scripts/ci.sh [extra pytest args]
+# Single CI gate: install deps (unless SKIP_INSTALL=1), run the tier-1
+# suite from ROADMAP.md, then smoke every CLI command quoted in the docs
+# (skip with SKIP_DOCS_SMOKE=1).  Usage:  ./scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,4 +14,10 @@ if [[ "${SKIP_INSTALL:-0}" != "1" ]]; then
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+if [[ "${SKIP_DOCS_SMOKE:-0}" != "1" ]]; then
+    # docs can't rot: run the bash blocks of docs/routing.md +
+    # docs/experiments.md (smallest presets) end to end
+    python scripts/docs_smoke.py
+fi

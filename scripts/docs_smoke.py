@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Docs smoke: execute every CLI command quoted in the doc set.
+
+Extracts fenced ```bash blocks from the docs listed below, joins
+backslash-continued lines, and runs each resulting command from the repo
+root with ``PYTHONPATH=src`` — so a doc example that drifts from the CLI
+breaks CI instead of rotting.  The quoted examples deliberately use the
+smallest presets; keep them that way.
+
+Usage:  python scripts/docs_smoke.py [doc.md ...]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_DOCS = [
+    os.path.join("docs", "routing.md"),
+    os.path.join("docs", "experiments.md"),
+]
+
+
+def bash_blocks(markdown: str) -> list[str]:
+    """Contents of every ```bash fenced block."""
+    return re.findall(r"```bash\n(.*?)```", markdown, flags=re.DOTALL)
+
+
+def commands(block: str) -> list[str]:
+    """Split a bash block into commands: join backslash continuations and
+    lines inside an unterminated double-quoted string (multi-line
+    ``python -c "..."`` examples); drop comments and blank lines."""
+    out: list[str] = []
+    cont = ""
+    for line in block.splitlines():
+        line = cont + line
+        cont = ""
+        if line.rstrip().endswith("\\"):
+            cont = line.rstrip()[:-1] + " "
+            continue
+        if line.count('"') % 2:          # inside a quoted heredoc-style arg
+            cont = line + "\n"
+            continue
+        stripped = line.strip()
+        if stripped and not stripped.startswith("#"):
+            out.append(stripped)
+    if cont.strip():
+        out.append(cont.strip())
+    return out
+
+
+def main(argv: list[str]) -> int:
+    docs = argv or DEFAULT_DOCS
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    n = 0
+    for doc in docs:
+        path = os.path.join(REPO, doc)
+        with open(path) as f:
+            text = f.read()
+        cmds = [c for block in bash_blocks(text) for c in commands(block)]
+        if not cmds:
+            print(f"docs-smoke: WARNING no bash commands found in {doc}")
+        for cmd in cmds:
+            n += 1
+            t0 = time.perf_counter()
+            print(f"docs-smoke [{doc}] $ {cmd}")
+            proc = subprocess.run(cmd, shell=True, cwd=REPO, env=env,
+                                  capture_output=True, text=True,
+                                  timeout=1200)
+            dt = time.perf_counter() - t0
+            if proc.returncode != 0:
+                sys.stdout.write(proc.stdout)
+                sys.stderr.write(proc.stderr)
+                print(f"docs-smoke: FAILED ({proc.returncode}) after "
+                      f"{dt:.1f}s: {cmd}")
+                return 1
+            print(f"docs-smoke: ok ({dt:.1f}s)")
+    print(f"docs-smoke: {n} commands from {len(docs)} docs all passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

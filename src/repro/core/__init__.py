@@ -12,7 +12,11 @@ from .planes import (SprayConfig, plane_chunk_fractions, split_chunks,
                      spray_completion_time)
 from .routing_vec import (ArrayLinkLoads, DemandArrays, EdgeIndex,
                           VectorizedHyperXRouter, demands_from_dict)
-from . import netsim, routing, routing_vec
+from .routing_graph import (CSRGraph, GraphLinkLoads, GraphRouter,
+                            graph_hotspot_demands, graph_reverse_demands,
+                            graph_ring_demands, graph_shift_demands,
+                            graph_uniform_demands)
+from . import netsim, routing, routing_graph, routing_vec
 
 __all__ = [
     "LinkClass", "SwitchGraph", "SwitchModel", "Topology", "DEFAULT_SWITCH",
@@ -25,5 +29,8 @@ __all__ = [
     "spray_completion_time",
     "ArrayLinkLoads", "DemandArrays", "EdgeIndex", "VectorizedHyperXRouter",
     "demands_from_dict",
-    "netsim", "routing", "routing_vec",
+    "CSRGraph", "GraphLinkLoads", "GraphRouter",
+    "graph_hotspot_demands", "graph_reverse_demands", "graph_ring_demands",
+    "graph_shift_demands", "graph_uniform_demands",
+    "netsim", "routing", "routing_graph", "routing_vec",
 ]

@@ -206,6 +206,32 @@ class DragonflyPlus(Topology):
             (spine_radix <= r, f"spine radix {spine_radix} > {r}"),
         ]
 
+    def build_graph(self) -> SwitchGraph:
+        """Group-major graph: group ``grp`` owns leaves ``grp*(l+s)..+l-1``
+        then spines; leaf-spine is a full bipartite Clos inside each group,
+        and the ``spines*global_per_spine`` global ports per group are
+        trunked evenly over the other groups (round-robin over spines, like
+        :meth:`Dragonfly.build_graph`).  NICs hang off leaves only."""
+        l, s, G = self.leaves, self.spines, self.groups
+        per_grp = l + s
+        g = SwitchGraph(
+            per_grp * G, self.p, self.port_gbps, name=self.name,
+            nic_nodes=[grp * per_grp + i for grp in range(G)
+                       for i in range(l)])
+        leaf = lambda grp, i: grp * per_grp + i
+        spine = lambda grp, j: grp * per_grp + l + j
+        for grp in range(G):
+            for i in range(l):
+                for j in range(s):
+                    g.add_edge(leaf(grp, i), spine(grp, j), 1.0,
+                               tier="leaf-spine")
+        per_pair = s * self.global_per_spine / (G - 1)
+        for grp in range(G):
+            for grp2 in range(grp + 1, G):
+                g.add_edge(spine(grp, grp2 % s), spine(grp2, grp % s),
+                           per_pair, tier="global")
+        return g
+
 
 def frontier_flattening_example() -> dict:
     """Paper §5.1 worked example, Frontier: radix 64, 16 global ports/switch,

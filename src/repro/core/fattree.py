@@ -106,6 +106,38 @@ class ThreeTierFatTree(Topology):
         return [(self.radix <= sw.radix_at(self.port_gbps),
                  f"radix {self.radix} > {sw.radix_at(self.port_gbps)}")]
 
+    def build_graph(self) -> SwitchGraph:
+        """Explicit 3-tier Clos graph: edge 0..E-1, agg E..E+A-1, core rest.
+
+        Pod-major numbering: pod ``q`` owns edge/agg switches
+        ``q*(k/2) + i``.  Agg slot ``j`` of every pod connects to core group
+        ``j`` (``n_core/(k/2)`` cores per group), with multiplicity spread
+        so each agg uses exactly its k/2 up ports.  NICs hang off edge
+        switches only (k/2 per edge).
+        """
+        k = self.radix
+        E, A, C = self.n_edge, self.n_agg, self.n_core
+        half = k // 2
+        if C % half:
+            raise ValueError(
+                f"graph builder needs cores ({C}) divisible by k/2 ({half})")
+        g = SwitchGraph(E + A + C, half, self.port_gbps, name=self.name,
+                        nic_nodes=range(E))
+        cores_per_slot = C // half
+        mult_up = half / cores_per_slot  # agg up ports per core in its group
+        for pod in range(self.n_pods):
+            for i in range(half):          # edge i of this pod
+                edge = pod * half + i
+                for j in range(half):      # agg j of this pod
+                    agg = E + pod * half + j
+                    g.add_edge(edge, agg, 1.0, tier="edge-agg")
+            for j in range(half):
+                agg = E + pod * half + j
+                for c in range(cores_per_slot):
+                    core = E + A + j * cores_per_slot + c
+                    g.add_edge(agg, core, mult_up, tier="agg-core")
+        return g
+
 
 @dataclass
 class MultiPlaneFatTree(Topology):
@@ -187,9 +219,10 @@ class MultiPlaneFatTree(Topology):
                  f"{sw.radix_at(self.port_gbps)} at {self.port_gbps} Gbps")]
 
     def build_graph(self) -> SwitchGraph:
-        """One plane's leaf/spine graph."""
+        """One plane's leaf/spine graph (leaves 0..L-1 bear the NICs)."""
         L, S = self.leaves_per_plane, self.spines_per_plane
-        g = SwitchGraph(L + S, self.radix // 2, self.port_gbps, name=self.name)
+        g = SwitchGraph(L + S, self.radix // 2, self.port_gbps, name=self.name,
+                        nic_nodes=range(L))
         up_per_leaf = self.radix // 2
         mult = up_per_leaf / S
         for leaf in range(L):

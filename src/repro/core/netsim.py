@@ -9,7 +9,10 @@ builds that evaluation:
 
 * zero-load latency  = hops * t_hop + serialization + propagation
 * uniform throughput = closed-form bisection / channel-load bound
-* adversarial throughput = via :mod:`routing` link-load accounting (MPHX)
+* routed throughput  = link-load accounting over whole demand matrices —
+  the MPHX array engine (:mod:`routing_vec`) or, for any topology with an
+  explicit switch graph (all 8 Table-2 rows), the generic graph engine
+  (:mod:`routing_graph`)
 * collective completion times (all-reduce / all-gather / reduce-scatter /
   all-to-all) with plane spraying — latency term counts *hops* so MPHX's
   smaller diameter shows up directly, bandwidth term counts bottleneck bytes.
@@ -115,13 +118,36 @@ def adversarial_throughput_fraction(topo: Topology, mode: str = "minimal",
     return ll.saturation_throughput(offered)
 
 
-def pattern_throughput(topo: MPHX, demands, mode: str = "adaptive",
-                       backend: str = "auto") -> dict:
-    """Saturation throughput of one :class:`~.routing_vec.DemandArrays`
-    traffic matrix on one plane, via the batched engine."""
+def resolve_engine(topo: Topology, engine: str = "auto") -> str:
+    """Routing engine for ``topo``: the MPHX array engine where it applies
+    (fastest, coordinate arithmetic), the generic graph engine otherwise."""
+    if engine == "auto":
+        return "array" if isinstance(topo, MPHX) else "graph"
+    if engine not in ("array", "graph"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "array" and not isinstance(topo, MPHX):
+        raise ValueError(f"array engine is MPHX-only, got {topo.name}")
+    return engine
+
+
+def make_router(topo: Topology, backend: str = "auto",
+                engine: str = "auto"):
+    """Construct the batched router for ``topo`` (shared ``route(demands,
+    mode) -> link loads`` interface across engines)."""
+    if resolve_engine(topo, engine) == "graph":
+        from .routing_graph import GraphRouter
+
+        return GraphRouter(topo, backend=backend)
     from .routing_vec import VectorizedHyperXRouter
 
-    ll = VectorizedHyperXRouter(topo, backend=backend).route(demands, mode)
+    return VectorizedHyperXRouter(topo, backend=backend)
+
+
+def pattern_throughput(topo: Topology, demands, mode: str = "adaptive",
+                       backend: str = "auto", engine: str = "auto") -> dict:
+    """Saturation throughput of one :class:`~.routing_vec.DemandArrays`
+    traffic matrix on one plane, via the batched engine for ``topo``."""
+    ll = make_router(topo, backend=backend, engine=engine).route(demands, mode)
     return {
         "max_util": ll.max_utilization(),
         "mean_util": ll.mean_utilization(),
@@ -146,20 +172,22 @@ def latency_under_load(topo: Topology, utilization: float,
     return base + sw_hops * net.t_switch * rho / (1.0 - rho)
 
 
-def load_sweep(topo: MPHX, demand_builder, mode: str = "adaptive",
+def load_sweep(topo: Topology, demand_builder, mode: str = "adaptive",
                load_fractions: "list[float]" = (0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
                msg_bytes: float = 4096, backend: str = "auto",
-               net: NetParams = DEFAULT_NET) -> "list[dict]":
+               net: NetParams = DEFAULT_NET,
+               engine: str = "auto", router=None) -> "list[dict]":
     """Latency/throughput vs offered load for one traffic scenario.
 
     ``demand_builder(topo, offered_per_nic_gbps) -> DemandArrays``.  The
     per-link utilizations scale linearly with offered load for ``minimal``/
     ``valiant`` (fixed path spread); ``adaptive`` re-routes at every level,
-    so each level is simulated independently.
+    so each level is simulated independently.  ``engine`` picks the batched
+    router (:func:`make_router`): MPHX array engine or generic graph engine;
+    pass a prebuilt ``router`` to reuse its graph/BFS state across sweeps.
     """
-    from .routing_vec import VectorizedHyperXRouter
-
-    router = VectorizedHyperXRouter(topo, backend=backend)
+    if router is None:
+        router = make_router(topo, backend=backend, engine=engine)
     rows = []
     base_ll = None
     for frac in load_fractions:

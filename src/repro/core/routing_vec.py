@@ -76,6 +76,58 @@ def _scatter_add(xp, loads, idx, w):
     return loads.at[idx].add(w)
 
 
+def backend_zeros(xp, n: int):
+    """A length-``n`` float accumulator on the selected backend (float64
+    under numpy or jax-x64, float32 otherwise)."""
+    if xp is np:
+        return np.zeros(n)
+    import jax
+
+    dtype = xp.float64 if jax.config.jax_enable_x64 else xp.float32
+    return xp.zeros(n, dtype=dtype)
+
+
+class BaseLinkLoads:
+    """Shared result API of the batched routing engines.
+
+    Subclasses hold per-link ``loads`` (offered Gbps, backend array) and
+    expose the matching capacities via :meth:`capacity_array`; everything
+    downstream (``netsim.load_sweep``, the sweep suite, benchmarks) only
+    touches this interface.
+    """
+
+    loads = None  # set by subclasses
+
+    def capacity_array(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def _np_loads(self) -> np.ndarray:
+        return np.asarray(self.loads)
+
+    def utilization_array(self) -> np.ndarray:
+        l = self._np_loads()
+        cap = self.capacity_array()
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return np.where(cap > 0, l / cap, 0.0)
+
+    def max_utilization(self) -> float:
+        u = self.utilization_array()
+        return float(u.max()) if u.size else 0.0
+
+    def mean_utilization(self) -> float:
+        """Mean over *loaded* slots (legacy averages over its dict entries)."""
+        u = self.utilization_array()
+        nz = self._np_loads() > 0
+        return float(u[nz].mean()) if nz.any() else 0.0
+
+    def saturation_throughput(self, offered_per_nic_gbps: float = 0.0) -> float:
+        mx = self.max_utilization()
+        return 1.0 if mx == 0 else min(1.0, 1.0 / mx)
+
+    def total_load(self) -> float:
+        return float(self._np_loads().sum())
+
+
 # ---------------------------------------------------------------------------
 # Edge-slot tensor
 # ---------------------------------------------------------------------------
@@ -150,7 +202,7 @@ class EdgeIndex:
         return u, self.topo.coord_to_id(tuple(coord))
 
 
-class ArrayLinkLoads:
+class ArrayLinkLoads(BaseLinkLoads):
     """Array counterpart of :class:`repro.core.routing.LinkLoads`."""
 
     def __init__(self, index: EdgeIndex, loads):
@@ -158,31 +210,8 @@ class ArrayLinkLoads:
         self.topo = index.topo
         self.loads = loads
 
-    def _np_loads(self) -> np.ndarray:
-        return np.asarray(self.loads)
-
-    def utilization_array(self) -> np.ndarray:
-        l = self._np_loads()
-        with np.errstate(divide="ignore", invalid="ignore"):
-            u = np.where(self.index.capacity > 0, l / self.index.capacity, 0.0)
-        return u
-
-    def max_utilization(self) -> float:
-        u = self.utilization_array()
-        return float(u.max()) if u.size else 0.0
-
-    def mean_utilization(self) -> float:
-        """Mean over *loaded* slots (legacy averages over its dict entries)."""
-        u = self.utilization_array()
-        nz = self._np_loads() > 0
-        return float(u[nz].mean()) if nz.any() else 0.0
-
-    def saturation_throughput(self, offered_per_nic_gbps: float = 0.0) -> float:
-        mx = self.max_utilization()
-        return 1.0 if mx == 0 else min(1.0, 1.0 / mx)
-
-    def total_load(self) -> float:
-        return float(self._np_loads().sum())
+    def capacity_array(self) -> np.ndarray:
+        return self.index.capacity
 
     def to_dict(self) -> dict[Edge, float]:
         """Nonzero loads as the legacy ``{(u, v): gbps}`` dict."""
@@ -348,13 +377,7 @@ class VectorizedHyperXRouter:
         return src, dst, gbps, cs, cd
 
     def _zeros(self):
-        if self.xp is np:
-            return np.zeros(self.index.n_slots)
-        import jax
-
-        dtype = self.xp.float64 if jax.config.jax_enable_x64 \
-            else self.xp.float32
-        return self.xp.zeros(self.index.n_slots, dtype=dtype)
+        return backend_zeros(self.xp, self.index.n_slots)
 
     def _walk_minimal(self, loads, src, gbps, cs, cd, perm_weight):
         """Add minimal ECMP loads.  ``perm_weight`` (M,) is the Gbps each of

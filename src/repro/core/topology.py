@@ -208,15 +208,22 @@ class SwitchGraph:
     parallel physical links — paper Table 2's MPHX(4,86,86,9) trunks 85
     links over 8 neighbours in dim 2) and a tier label.
 
-    ``nics_per_switch`` NIC ports hang off every node.
+    ``nics_per_switch`` NIC ports hang off every *NIC-bearing* node.  By
+    default every node bears NICs (HyperX, Dragonfly); hierarchical
+    topologies whose upper tiers are transit-only (fat-tree spines/cores,
+    Dragonfly+ spines) restrict that with ``nic_nodes``.
     """
 
     def __init__(self, n_switches: int, nics_per_switch: int,
-                 link_gbps: float, name: str = "plane"):
+                 link_gbps: float, name: str = "plane",
+                 nic_nodes: "Sequence[int] | None" = None):
         self.name = name
         self.n_switches = n_switches
         self.nics_per_switch = nics_per_switch
         self.link_gbps = link_gbps
+        # NIC-bearing nodes (traffic sources/sinks); None = all nodes
+        self.nic_nodes: list[int] = (list(range(n_switches))
+                                     if nic_nodes is None else list(nic_nodes))
         # adjacency: dict[node] -> dict[neighbor] -> multiplicity (float ok)
         self.adj: list[dict[int, float]] = [dict() for _ in range(n_switches)]
         self.tier: dict[tuple[int, int], str] = {}
@@ -244,6 +251,17 @@ class SwitchGraph:
 
     def multiplicity(self, u: int, v: int) -> float:
         return self.adj[u].get(v, 0.0)
+
+    def nic_counts(self) -> list[int]:
+        """Per-node NIC port counts (0 for transit-only switches)."""
+        out = [0] * self.n_switches
+        for u in self.nic_nodes:
+            out[u] = self.nics_per_switch
+        return out
+
+    @property
+    def total_nics(self) -> int:
+        return self.nics_per_switch * len(self.nic_nodes)
 
     def directed_edge_arrays(self):
         """All directed edges as parallel lists ``(u, v, multiplicity)`` —

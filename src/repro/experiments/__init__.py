@@ -1,7 +1,9 @@
 """repro.experiments — the paper's deferred §6 evaluation, as a subsystem.
 
-Builds on the batched array routing engine (:mod:`repro.core.routing_vec`)
-to evaluate whole traffic matrices in one shot:
+Builds on the batched routing engines — the MPHX coordinate array engine
+(:mod:`repro.core.routing_vec`) and the topology-agnostic graph engine
+(:mod:`repro.core.routing_graph`, all Table-2 baselines) — to evaluate
+whole traffic matrices in one shot:
 
 * :mod:`~repro.experiments.scenarios` — named traffic scenarios (synthetic
   patterns + collective chunk schedules) with a registry;
@@ -13,13 +15,13 @@ to evaluate whole traffic matrices in one shot:
 """
 
 from .scenarios import SCENARIOS, Scenario, available_scenarios, get_scenario
-from .sweep import (SWEEP_TOPOLOGIES, run_sweep_suite, run_table2_suite,
-                    sweep_topology)
+from .sweep import (DEFAULT_SWEEP_TOPOS, ROUTING_MODES, SWEEP_TOPOLOGIES,
+                    run_sweep_suite, run_table2_suite, sweep_topology)
 from .artifacts import markdown_table, write_json, write_markdown
 
 __all__ = [
     "SCENARIOS", "Scenario", "available_scenarios", "get_scenario",
-    "SWEEP_TOPOLOGIES", "run_sweep_suite", "run_table2_suite",
-    "sweep_topology",
+    "DEFAULT_SWEEP_TOPOS", "ROUTING_MODES", "SWEEP_TOPOLOGIES",
+    "run_sweep_suite", "run_table2_suite", "sweep_topology",
     "markdown_table", "write_json", "write_markdown",
 ]

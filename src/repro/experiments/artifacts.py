@@ -1,10 +1,10 @@
 """JSON + markdown artifact writers for experiment suites.
 
-Artifact schema (``schema_version`` 1):
+Artifact schema (``schema_version`` 2):
 
 ```json
 {
-  "schema_version": 1,
+  "schema_version": 2,
   "suite": "table2" | "sweep",
   "generated_by": "repro.experiments",
   "params": { ... suite parameters ... },
@@ -15,6 +15,16 @@ Artifact schema (``schema_version`` 1):
 Every suite writes ``<suite>.json`` (machine-readable, exactly the payload
 above) and ``<suite>.md`` (the same rows as a GitHub-flavored markdown
 table, for review in PRs).
+
+Schema history:
+
+* **v2** — sweep rows gained an ``engine`` column (``"array"`` = MPHX
+  coordinate engine, ``"graph"`` = generic SwitchGraph engine), and
+  undefined (topology, scenario) cells are recorded as explicit
+  ``{"skipped": true, "reason": ...}`` records instead of being dropped;
+  sweep params gained ``engine`` / ``n_routed_rows`` / ``n_skipped``.
+  table2 rows are unchanged.
+* **v1** — initial: routed sweep rows for MPHX topologies only.
 """
 
 from __future__ import annotations
@@ -23,7 +33,7 @@ import json
 import os
 from typing import Sequence
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
 def artifact_payload(suite: str, params: dict, rows: list[dict]) -> dict:

@@ -20,8 +20,8 @@ import argparse
 import sys
 
 from .scenarios import SCENARIOS
-from .sweep import (DEFAULT_OUTDIR, SWEEP_TOPOLOGIES, run_sweep_suite,
-                    run_table2_suite)
+from .sweep import (DEFAULT_OUTDIR, DEFAULT_SWEEP_TOPOS, SWEEP_TOPOLOGIES,
+                    run_sweep_suite, run_table2_suite)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -33,13 +33,18 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--out", default=DEFAULT_OUTDIR,
                    help="artifact directory (default results/experiments)")
     p.add_argument("--topos", nargs="+", choices=sorted(SWEEP_TOPOLOGIES),
-                   default=None, help="sweep topologies "
-                   "(default: the two small presets)")
+                   default=None, help="sweep topologies (default: "
+                   f"{' '.join(DEFAULT_SWEEP_TOPOS)})")
     p.add_argument("--scenarios", nargs="+", choices=sorted(SCENARIOS),
-                   default=None, help="scenarios (default: all applicable)")
+                   default=None, help="scenarios (default: all; inapplicable "
+                   "ones are recorded as skipped)")
     p.add_argument("--modes", nargs="+",
                    choices=["minimal", "valiant", "adaptive"], default=None,
-                   help="routing modes (default: minimal + scenario default)")
+                   help="routing modes (default: all three)")
+    p.add_argument("--engine", choices=["auto", "array", "graph"],
+                   default="auto",
+                   help="routing engine (auto: array for MPHX, graph "
+                   "for baseline topologies)")
     p.add_argument("--loads", nargs="+", type=float,
                    default=[0.1, 0.25, 0.5, 0.75, 0.9, 1.0],
                    help="offered load fractions of NIC bandwidth")
@@ -62,8 +67,10 @@ def main(argv: "list[str] | None" = None) -> int:
         payload = run_sweep_suite(
             args.out, topo_names=args.topos, scenario_names=args.scenarios,
             modes=args.modes, load_fractions=tuple(args.loads),
-            msg_bytes=args.msg_bytes, backend=args.backend)
-        print(f"sweep: {len(payload['rows'])} rows -> "
+            msg_bytes=args.msg_bytes, backend=args.backend,
+            engine=args.engine)
+        print(f"sweep: {payload['params']['n_routed_rows']} routed rows, "
+              f"{payload['params']['n_skipped']} skipped -> "
               f"{args.out}/sweep.json, {args.out}/sweep.md")
     return 0
 

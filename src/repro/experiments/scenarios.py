@@ -1,17 +1,29 @@
 """Traffic scenario registry for the sweep runner.
 
-A *scenario* names a switch-level traffic matrix builder over one MPHX
-plane: synthetic patterns (the FatPaths/RailX evaluation style) plus
+A *scenario* names a switch-level traffic matrix over one plane of a
+topology: synthetic patterns (the FatPaths/RailX evaluation style) plus
 collective chunk schedules whose per-plane load derives from the paper's
 NIC spraying model (:mod:`repro.core.planes`) and the JAX chunk
 decomposition (:func:`repro.core.collectives.plane_chunk_count`).
 
-Every builder has the signature ``builder(topo, offered_per_nic_gbps) ->
-DemandArrays`` where ``offered_per_nic_gbps`` is the *injection* rate per
-NIC across all planes; the builder internally takes one plane's share.
+Every scenario carries up to two builders with the signature
+``builder(topo, offered_per_nic_gbps) -> DemandArrays`` where
+``offered_per_nic_gbps`` is the *injection* rate per NIC across all
+planes (the builder internally takes one plane's share):
+
+* ``builder`` — the MPHX coordinate builder (:mod:`repro.core.routing_vec`
+  generators; exact paper semantics, e.g. neighbor shift along dim 0);
+* ``graph_builder`` — the generic :class:`~repro.core.topology.SwitchGraph`
+  analogue (:mod:`repro.core.routing_graph` generators; NIC-bearing
+  switches in id order), used for the Table-2 baseline topologies.
+
+A scenario without a ``graph_builder`` (``transpose`` needs a coordinate
+grid) is *skipped with an explicit reason* on non-MPHX topologies —
+:meth:`Scenario.skip_reason` is the single source of truth the sweep
+runner records in the artifact (no silent drops).
 
 Docs: ``docs/experiments.md`` lists every scenario with its CLI invocation
-and the artifact schema it emits.
+and the artifact schema it emits; ``docs/routing.md`` covers the engines.
 """
 
 from __future__ import annotations
@@ -22,10 +34,15 @@ from typing import Callable
 from repro.core.collectives import plane_chunk_count
 from repro.core.hyperx import MPHX
 from repro.core.planes import SprayConfig, plane_chunk_fractions
+from repro.core.routing_graph import (graph_hotspot_demands,
+                                      graph_reverse_demands,
+                                      graph_ring_demands, graph_shift_demands,
+                                      graph_uniform_demands)
 from repro.core.routing_vec import (DemandArrays, bit_complement_demands,
                                     hotspot_demands, neighbor_shift_demands,
                                     ring_demands, transpose_demands,
                                     uniform_demands)
+from repro.core.topology import Topology
 
 
 @dataclass(frozen=True)
@@ -37,12 +54,41 @@ class Scenario:
     description: str
     builder: Callable[[MPHX, float], DemandArrays]
     default_mode: str = "adaptive"
-    # cheap precondition; None = applies everywhere.  Kept separate from
-    # the builder so applicability checks never materialize demand arrays.
+    # cheap MPHX precondition; None = applies to every MPHX.  Kept separate
+    # from the builder so applicability checks never materialize demands.
     requires: "Callable[[MPHX], bool] | None" = None
+    requires_reason: str = ""
+    # generic SwitchGraph builder; None = MPHX-only scenario
+    graph_builder: "Callable[[Topology, float], DemandArrays] | None" = None
 
-    def applicable(self, topo: MPHX) -> bool:
-        return self.requires is None or self.requires(topo)
+    def skip_reason(self, topo: Topology) -> "str | None":
+        """Why this scenario does not apply to ``topo`` (None = it does)."""
+        if isinstance(topo, MPHX):
+            if self.requires is not None and not self.requires(topo):
+                return self.requires_reason or "precondition not met"
+            return None
+        if self.graph_builder is None:
+            return ("MPHX-coordinate pattern with no generic graph "
+                    "analogue")
+        if type(topo).build_graph is Topology.build_graph:
+            return f"{topo.name} has no explicit switch graph"
+        return None
+
+    def applicable(self, topo: Topology) -> bool:
+        return self.skip_reason(topo) is None
+
+    def build(self, topo: Topology, offered_per_nic_gbps: float,
+              graph=None) -> DemandArrays:
+        """Demand matrix for one plane of ``topo`` (dispatches to the
+        coordinate builder on MPHX, the graph builder otherwise).  Pass a
+        prebuilt ``graph`` to avoid rebuilding the SwitchGraph per call."""
+        if isinstance(topo, MPHX):
+            return self.builder(topo, offered_per_nic_gbps)
+        if self.graph_builder is None:
+            raise ValueError(
+                f"scenario {self.name!r} is MPHX-only: "
+                f"{self.skip_reason(topo)}")
+        return self.graph_builder(topo, offered_per_nic_gbps, graph=graph)
 
 
 SCENARIOS: dict[str, Scenario] = {}
@@ -64,7 +110,7 @@ def get_scenario(name: str) -> Scenario:
             f"{', '.join(sorted(SCENARIOS))}") from None
 
 
-def available_scenarios(topo: MPHX | None = None) -> list[str]:
+def available_scenarios(topo: "Topology | None" = None) -> list[str]:
     names = sorted(SCENARIOS)
     if topo is None:
         return names
@@ -77,34 +123,42 @@ def available_scenarios(topo: MPHX | None = None) -> list[str]:
 
 register(Scenario(
     "uniform", "synthetic",
-    "Every NIC sprays uniformly over all other switches (best case; "
-    "bisection-bound).",
-    uniform_demands, default_mode="minimal"))
+    "Every NIC sprays uniformly over all other NIC-bearing switches "
+    "(best case; bisection-bound).",
+    uniform_demands, default_mode="minimal",
+    graph_builder=graph_uniform_demands))
 
 register(Scenario(
     "neighbor_shift", "synthetic",
-    "+1 shift along dimension 0 — the paper's §5.2 adversarial case: one "
-    "thin direct trunk per pair, minimal routing collapses, DAL recovers.",
-    neighbor_shift_demands))
+    "+1 shift permutation — the paper's §5.2 adversarial case: one thin "
+    "direct path per pair, minimal routing collapses, non-minimal "
+    "recovers.  MPHX: +1 along dim 0; generic: +1 in NIC-switch id order.",
+    neighbor_shift_demands,
+    graph_builder=graph_shift_demands))
 
 register(Scenario(
     "bit_complement", "synthetic",
-    "Coordinate complement permutation (every dimension mismatched; "
-    "classic worst case for dimension-ordered routing).",
-    bit_complement_demands))
+    "Complement permutation (every demand crosses the whole fabric; "
+    "classic worst case for dimension-ordered routing).  MPHX: coordinate "
+    "complement; generic: reverse pairing in NIC-switch id order.",
+    bit_complement_demands,
+    graph_builder=graph_reverse_demands))
 
 register(Scenario(
     "transpose", "synthetic",
     "Swap the first two coordinates (requires dims[0] == dims[1]); "
     "adversarial for dimension-ordered minimal routing.",
     transpose_demands,
-    requires=lambda t: t.D >= 2 and t.dims[0] == t.dims[1]))
+    requires=lambda t: t.D >= 2 and t.dims[0] == t.dims[1],
+    requires_reason="transpose needs a square coordinate grid "
+                    "(dims[0] == dims[1])"))
 
 register(Scenario(
     "hotspot", "synthetic",
     "50% of every switch's load targets one hot switch, rest uniform "
     "(incast around the hot spot).",
-    hotspot_demands))
+    hotspot_demands,
+    graph_builder=graph_hotspot_demands))
 
 
 # ---------------------------------------------------------------------------
@@ -112,58 +166,80 @@ register(Scenario(
 # ---------------------------------------------------------------------------
 
 
-def _spray_imbalance(topo: MPHX, payload_bytes: int) -> float:
+def _spray_imbalance(n_planes: int, payload_bytes: int) -> float:
     """Hottest plane's share of a sprayed collective, relative to perfect
     1/n spray.  Whole-chunk rounding makes early planes carry more for
     small payloads; the sweep charges the plane fabric at that factor."""
-    cfg = SprayConfig(n_planes=topo.n)
+    cfg = SprayConfig(n_planes=n_planes)
     fracs = plane_chunk_fractions(payload_bytes, cfg)
-    return max(fracs) * topo.n
+    return max(fracs) * n_planes
 
 
-def _collective_builder(pattern, payload_bytes: int = 1 << 20,
+def _ring_size(topo: Topology, graph=None) -> int:
+    """Ring participants: switches per plane (MPHX) or NIC-bearing
+    switches (generic graphs)."""
+    if isinstance(topo, MPHX):
+        return topo.switches_per_plane
+    if graph is None:
+        graph = topo.build_graph()
+    return len(graph.nic_nodes)
+
+
+def _collective_builder(pattern, graph_pattern=None,
+                        payload_bytes: int = 1 << 20,
                         ring_chunked: bool = False):
     """Scale a pattern by the hottest plane's share of the chunk schedule.
 
     ``ring_chunked``: a ring all-reduce moves ``payload/m`` per step
-    (m ring participants = switches per plane), so spray imbalance is
-    computed on the per-step chunk — small chunks spray poorly.  An
-    all-gather ring moves the full payload every step.
+    (m ring participants), so spray imbalance is computed on the per-step
+    chunk — small chunks spray poorly.  An all-gather ring moves the full
+    payload every step.
     """
 
-    def build(topo: MPHX, offered_per_nic_gbps: float) -> DemandArrays:
-        d = pattern(topo, offered_per_nic_gbps)
+    def build(topo: Topology, offered_per_nic_gbps: float,
+              graph=None) -> DemandArrays:
+        if isinstance(topo, MPHX):
+            d = pattern(topo, offered_per_nic_gbps)
+        else:
+            d = graph_pattern(topo, offered_per_nic_gbps, graph=graph)
         step_bytes = payload_bytes
         if ring_chunked:
-            step_bytes = max(payload_bytes // topo.switches_per_plane, 1)
+            step_bytes = max(payload_bytes // _ring_size(topo, graph), 1)
         # when the step payload does not chunk evenly over the planes the
         # JAX decomposition issues ONE ordered collective (collectives.py),
         # so a single plane carries each step in turn -> full n penalty
-        if plane_chunk_count(step_bytes, topo.n) == 1:
-            scale = float(topo.n)
+        n = topo.n_planes
+        if plane_chunk_count(step_bytes, n) == 1:
+            scale = float(n)
         else:
-            scale = _spray_imbalance(topo, step_bytes)
+            scale = _spray_imbalance(n, step_bytes)
         return DemandArrays(d.src, d.dst, d.gbps * scale)
 
     return build
 
 
-register(Scenario(
-    "allreduce_ring", "collective",
+def _register_collective(name, description, pattern, graph_pattern,
+                         **kw):
+    both = _collective_builder(pattern, graph_pattern, **kw)
+    register(Scenario(name, "collective", description, both,
+                      default_mode="minimal", graph_builder=both))
+
+
+_register_collective(
+    "allreduce_ring",
     "Steady-state link pattern of a ring all-reduce over switch-ordered "
     "ranks; per-step chunk is payload/m, so the spray schedule is charged "
     "on small chunks.",
-    _collective_builder(ring_demands, ring_chunked=True),
-    default_mode="minimal"))
+    ring_demands, graph_ring_demands, ring_chunked=True)
 
-register(Scenario(
-    "allgather_ring", "collective",
+_register_collective(
+    "allgather_ring",
     "Ring all-gather steady-state pattern (same ring links as all-reduce "
     "but the full payload moves every step, so spraying is near-perfect).",
-    _collective_builder(ring_demands), default_mode="minimal"))
+    ring_demands, graph_ring_demands)
 
-register(Scenario(
-    "alltoall", "collective",
+_register_collective(
+    "alltoall",
     "All-to-all chunk exchange — uniform all-pairs at full injection, "
     "spray-chunked across planes (bisection-bound).",
-    _collective_builder(uniform_demands), default_mode="minimal"))
+    uniform_demands, graph_uniform_demands)

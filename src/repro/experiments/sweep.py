@@ -5,32 +5,48 @@
   the flow-level latency/throughput model (the §6 evaluation the paper
   defers to future work).
 * :func:`run_sweep_suite` — latency/throughput-vs-load sweeps of every
-  registered traffic scenario over MPHX instances, computed with the
-  batched array routing engine.
+  registered traffic scenario over MPHX instances *and* the Table-2
+  baseline topologies, computed with real routed loads: the MPHX array
+  engine (:mod:`repro.core.routing_vec`) for HyperX and the generic graph
+  engine (:mod:`repro.core.routing_graph`) for everything else.  Every row
+  records which ``engine`` produced it; a scenario that does not apply to
+  a topology produces an explicit ``skipped`` record (with a reason) in
+  the artifact and a stderr note — never a silent drop.
 
 Both write JSON + markdown artifacts (see :mod:`~repro.experiments.artifacts`
-for the schema) and return the JSON payloads.
+for the schema, version 2) and return the JSON payloads.
 """
 
 from __future__ import annotations
 
 import os
+import sys
 import time
 
 from repro.core import MPHX, PAPER_TABLE2, cost_report, table2_topologies
+from repro.core.dragonfly import Dragonfly, DragonflyPlus
+from repro.core.fattree import MultiPlaneFatTree, ThreeTierFatTree
 from repro.core.netsim import (DEFAULT_NET, allreduce_time, avg_latency,
-                               load_sweep, uniform_throughput_fraction,
-                               zero_load_latency)
+                               load_sweep, make_router, resolve_engine,
+                               uniform_throughput_fraction, zero_load_latency)
+from repro.core.topology import Topology
 from .artifacts import (artifact_payload, markdown_table, write_json,
                         write_markdown)
 from .scenarios import SCENARIOS, get_scenario
 
 DEFAULT_OUTDIR = os.path.join("results", "experiments")
 
-# MPHX instances for routing sweeps (the non-HyperX Table-2 topologies have
-# no explicit switch graph; they are compared via the closed forms in the
-# table2 suite instead).
-SWEEP_TOPOLOGIES: dict[str, "MPHX"] = {
+ROUTING_MODES = ("minimal", "valiant", "adaptive")
+
+# Topologies for routed sweeps.  MPHX instances route on the coordinate
+# array engine; every other topology routes on the generic graph engine
+# over its explicit SwitchGraph — all 8 Table-2 topology classes are
+# covered.  The ``*-small`` presets are scaled-down instances of the
+# Table-2 baselines for fast default sweeps and CI; the ``*-65536``
+# presets are the actual Table-2 rows (opt-in: graph routing at 65K NICs
+# takes minutes, not seconds).
+SWEEP_TOPOLOGIES: dict[str, Topology] = {
+    # -- MPHX (array engine) --
     # small — fast, and exactly comparable against the legacy dict router
     "mphx-2p-8x8": MPHX(n=2, p=8, dims=(8, 8)),
     # medium — 4k NICs
@@ -40,7 +56,28 @@ SWEEP_TOPOLOGIES: dict[str, "MPHX"] = {
                          name="4-Plane 2D HyperX"),
     # Table 2 row: 65,536 NICs, single full-mesh dimension
     "mphx-8p-256": MPHX(n=8, p=256, dims=(256,), name="8-Plane 1D HyperX"),
+    # -- Table-2 baselines, small presets (graph engine) --
+    "ft3-small": ThreeTierFatTree(radix=8, nics=128,
+                                  name="3-layer Fat-Tree (small)"),
+    "mpft-2p-small": MultiPlaneFatTree(n=2, nics=32, base_radix=4,
+                                       name="2-Plane 2-layer Fat-Tree "
+                                            "(small)"),
+    "dragonfly-small": Dragonfly(p=2, a=4, h=2, groups=9,
+                                 name="Dragonfly (small)"),
+    "dfplus-small": DragonflyPlus(p=2, leaves=4, spines=4, groups=8,
+                                  global_per_spine=7,
+                                  name="Dragonfly+ (small)"),
+    # -- Table-2 baselines, paper-scale rows (graph engine; opt-in) --
+    "ft3-65536": ThreeTierFatTree(radix=64, nics=65_536),
+    "mpft-8p-65536": MultiPlaneFatTree(n=8, nics=65_536),
+    "dragonfly-65536": Dragonfly(p=16, a=32, h=16, groups=128),
+    "dfplus-65536": DragonflyPlus(),
 }
+
+# default sweep: the small MPHX preset + all four baseline classes, so a
+# bare ``--suite sweep`` exercises both engines end to end
+DEFAULT_SWEEP_TOPOS = ["mphx-2p-8x8", "ft3-small", "mpft-2p-small",
+                       "dragonfly-small", "dfplus-small"]
 
 
 # ---------------------------------------------------------------------------
@@ -99,28 +136,56 @@ def run_table2_suite(outdir: str = DEFAULT_OUTDIR,
 # ---------------------------------------------------------------------------
 
 
-def sweep_topology(topo: MPHX, scenario_names: "list[str] | None" = None,
+def sweep_topology(topo: Topology, scenario_names: "list[str] | None" = None,
                    modes: "list[str] | None" = None,
                    load_fractions=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
                    msg_bytes: float = 4096,
-                   backend: str = "auto") -> list[dict]:
-    """Latency/throughput-vs-load rows for one MPHX instance."""
+                   backend: str = "auto",
+                   engine: str = "auto") -> list[dict]:
+    """Latency/throughput-vs-load rows for one topology instance.
+
+    Returns routed rows plus, for every requested scenario that does not
+    apply to ``topo``, one ``{"skipped": True, "reason": ...}`` record —
+    undefined (topology, scenario) cells are never dropped silently
+    (a note also goes to stderr).  A forced ``engine`` that cannot route
+    ``topo`` (e.g. ``--engine array`` on a Fat-Tree) likewise yields one
+    skip record for the whole topology instead of aborting the suite.
+    """
+    try:
+        engine_name = resolve_engine(topo, engine)
+    except ValueError as e:
+        print(f"sweep: skipping topology {topo.name!r}: {e}",
+              file=sys.stderr)
+        return [{"topology": topo.name, "scenario": "*", "engine": engine,
+                 "skipped": True, "reason": str(e)}]
+    # one router per topology: the graph engine's SwitchGraph build and
+    # all-pairs BFS are shared across every (scenario, mode, load) cell
+    router = make_router(topo, backend=backend, engine=engine)
+    graph = getattr(router, "graph", None)
     rows = []
     for name in scenario_names or sorted(SCENARIOS):
         sc = get_scenario(name)
-        if not sc.applicable(topo):
+        reason = sc.skip_reason(topo)
+        if reason is not None:
+            print(f"sweep: skipping scenario {name!r} on {topo.name!r}: "
+                  f"{reason}", file=sys.stderr)
+            rows.append({"topology": topo.name, "scenario": name,
+                         "kind": sc.kind, "engine": engine_name,
+                         "skipped": True, "reason": reason})
             continue
-        mode_list = modes if modes is not None \
-            else list(dict.fromkeys(["minimal", sc.default_mode]))
+        build = lambda t, o, sc=sc: sc.build(t, o, graph=graph)
+        mode_list = modes if modes is not None else list(ROUTING_MODES)
         for mode in mode_list:
             t0 = time.perf_counter()
-            sweep = load_sweep(topo, sc.builder, mode=mode,
+            sweep = load_sweep(topo, build, mode=mode,
                                load_fractions=load_fractions,
-                               msg_bytes=msg_bytes, backend=backend)
+                               msg_bytes=msg_bytes, backend=backend,
+                               engine=engine, router=router)
             dt = time.perf_counter() - t0
             for r in sweep:
                 rows.append({"topology": topo.name, "scenario": name,
-                             "kind": sc.kind, "mode": mode, **r,
+                             "kind": sc.kind, "mode": mode,
+                             "engine": engine_name, **r,
                              "sweep_wall_s": round(dt, 4)})
     return rows
 
@@ -131,21 +196,26 @@ def run_sweep_suite(outdir: str = DEFAULT_OUTDIR,
                     modes: "list[str] | None" = None,
                     load_fractions=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
                     msg_bytes: float = 4096,
-                    backend: str = "auto") -> dict:
+                    backend: str = "auto",
+                    engine: str = "auto") -> dict:
     """Sweep every (topology, scenario, mode, load) cell and write artifacts."""
-    names = topo_names or ["mphx-2p-8x8", "mphx-2p-16x16"]
+    names = topo_names or list(DEFAULT_SWEEP_TOPOS)
     all_rows = []
     for tn in names:
         topo = SWEEP_TOPOLOGIES[tn]
         all_rows += sweep_topology(topo, scenario_names, modes,
-                                   load_fractions, msg_bytes, backend)
+                                   load_fractions, msg_bytes, backend,
+                                   engine)
+    routed = [r for r in all_rows if not r.get("skipped")]
+    skipped = [r for r in all_rows if r.get("skipped")]
     payload = artifact_payload(
         "sweep",
         {"topologies": names,
          "scenarios": scenario_names or sorted(SCENARIOS),
-         "modes": modes or "per-scenario default + minimal",
+         "modes": modes or list(ROUTING_MODES),
          "load_fractions": list(load_fractions),
-         "msg_bytes": msg_bytes, "backend": backend},
+         "msg_bytes": msg_bytes, "backend": backend, "engine": engine,
+         "n_routed_rows": len(routed), "n_skipped": len(skipped)},
         all_rows)
     write_json(os.path.join(outdir, "sweep.json"), payload)
     # markdown: one table per topology at the highest swept load
@@ -153,13 +223,18 @@ def run_sweep_suite(outdir: str = DEFAULT_OUTDIR,
     sections = []
     for tn in names:
         topo = SWEEP_TOPOLOGIES[tn]
-        t_rows = [r for r in all_rows if r["topology"] == topo.name]
+        t_rows = [r for r in routed if r["topology"] == topo.name]
         full = [r for r in t_rows if r["offered_fraction"] == top_load]
-        cols = ["scenario", "mode", "max_util", "throughput_fraction",
-                "delivered_fraction", "latency_us"]
+        cols = ["scenario", "mode", "engine", "max_util",
+                "throughput_fraction", "delivered_fraction", "latency_us"]
         sections.append(
             (f"{topo.name} ({topo.n_nics} NICs) @ {top_load:g}x injection",
              markdown_table(full, cols)))
+    if skipped:
+        sections.append(
+            ("Skipped (scenario undefined for topology)",
+             markdown_table(skipped,
+                            ["topology", "scenario", "reason"])))
     write_markdown(os.path.join(outdir, "sweep.md"),
                    "Latency / throughput vs offered load", sections)
     return payload
