@@ -405,6 +405,107 @@ def bench_graph_routing():
          f"cross_engine_1e-9={'yes' if ok else 'NO'}")
 
 
+# ------------------------------------------------------ flow simulator ----
+
+
+def bench_flow_sim():
+    """Flow-level simulator: steady-state cross-validation against both
+    analytic engines (1e-6), single-flow FCT vs the closed form, measured
+    FCT sweep timings, and a failure sweep.  Writes
+    results/BENCH_flow_sim.json."""
+    from repro.core.dragonfly import Dragonfly
+    from repro.core.netsim import gbps_to_Bps, make_router
+    from repro.core.routing_graph import graph_uniform_demands
+    from repro.core.routing_vec import get_backend, uniform_demands
+    from repro.sim import (FlowSpec, failure_throughput, flow_incidence,
+                           parse_failure_spec, simulate_demands,
+                           simulate_flows)
+    from repro.sim.events import path_latency
+
+    record = {"schema_version": 1, "bench": "flow_sim",
+              "backend": get_backend("auto")[0]}
+
+    mphx = MPHX(n=2, p=8, dims=(8, 8))
+    df = Dragonfly(p=2, a=4, h=2, groups=9, name="Dragonfly (small)")
+
+    # steady-state agreement: sim load accounting vs analytic engines
+    agree = {}
+    for topo, dem_builder in ((mphx, uniform_demands),
+                              (df, graph_uniform_demands)):
+        router = make_router(topo)
+        dem = dem_builder(topo, 1600.0)
+        ll, t_route = timed(lambda: router.route(dem, "minimal"))
+        inc, t_inc = timed(lambda: flow_incidence(router, dem, "minimal"))
+        diff = float(abs(inc.utilization(dem.gbps)
+                         - ll.utilization_array()).max())
+        agree[topo.name] = {
+            "engine": "array" if isinstance(topo, MPHX) else "graph",
+            "traffic": "uniform", "n_flows": dem.n,
+            "max_abs_util_diff": diff, "within_1e-6": bool(diff < 1e-6),
+            "route_s": t_route / 1e6, "incidence_s": t_inc / 1e6,
+        }
+        emit(f"sim/steady_{topo.name.replace(' ', '_')}", t_inc,
+             f"max_abs_util_diff={diff:.3e};"
+             f"match={'yes' if diff < 1e-6 else 'NO'}")
+    record["steady_state_agreement"] = agree
+
+    # single-flow FCT vs closed form bytes/bandwidth + latency
+    router = make_router(mphx)
+    res, t_sim = timed(
+        lambda: simulate_flows(router, [FlowSpec(0, 5, 1 << 24)]))
+    inc = res.incidence
+    rate = min(mphx.port_gbps, float(inc.bottleneck_gbps()[0]))
+    closed = (1 << 24) / gbps_to_Bps(rate) + float(path_latency(inc)[0])
+    fct_err = abs(float(res.fct_s[0]) - closed) / closed
+    record["single_flow_fct"] = {
+        "topology": mphx.name, "bytes": 1 << 24,
+        "fct_s": float(res.fct_s[0]), "closed_form_s": closed,
+        "rel_err": fct_err, "matches_closed_form": bool(fct_err < 1e-9),
+    }
+    emit("sim/single_flow_fct", res.fct_s[0] * 1e6,
+         f"closed_form_us={closed * 1e6:.3f};rel_err={fct_err:.2e}")
+
+    # measured-FCT sweep wall time (uniform @ 0.9 load, both engines)
+    sweeps = {}
+    for topo, dem_builder in ((mphx, uniform_demands),
+                              (df, graph_uniform_demands)):
+        router = make_router(topo)
+        dem = dem_builder(topo, 0.9 * topo.nic_bw_gbps)
+        row, us = timed(lambda: simulate_demands(router, dem, 200e-6))
+        sweeps[topo.name] = {"load": 0.9, "wall_s": us / 1e6, **row}
+        emit(f"sim/fct_sweep_{topo.name.replace(' ', '_')}", us,
+             f"flows={row['sim_flows']};epochs={row['sim_epochs']};"
+             f"fct_p99_us={row['fct_p99_us']};"
+             f"delivered={row['sim_delivered_fraction']}")
+    record["fct_sweep"] = sweeps
+
+    # failure sweep: one link-failure rate x two topologies
+    spec = parse_failure_spec("link:0.05")
+    fails = {}
+    for topo in (mphx, df):
+        build = lambda t, o, g: graph_uniform_demands(t, o, graph=g)
+        ft, us = timed(lambda: failure_throughput(topo, build, spec,
+                                                  800.0, mode="adaptive"))
+        fails[topo.name] = {"spec": spec.label(), **ft,
+                            "wall_s": us / 1e6}
+        emit(f"sim/failures_{topo.name.replace(' ', '_')}", us,
+             f"spec={spec.label()};retained={ft['throughput_retained']};"
+             f"degraded_util={ft['degraded_max_util']}")
+    record["failure_sweep"] = fails
+
+    out = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "BENCH_flow_sim.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    ok = (all(v["within_1e-6"] for v in agree.values())
+          and record["single_flow_fct"]["matches_closed_form"])
+    emit("sim/bench_artifact", 0.0,
+         f"wrote={os.path.relpath(path, os.path.join(out, '..'))};"
+         f"cross_validates={'yes' if ok else 'NO'}")
+
+
 # --------------------------------------------------- experiment suites ----
 
 
@@ -423,6 +524,7 @@ BENCHES = {
     "table2": bench_table2,
     "vectorized": bench_vectorized,
     "graph": bench_graph_routing,
+    "sim": bench_flow_sim,
     "experiments": bench_experiments,
     "diameter": bench_diameter,
     "flattening": bench_flattening,

@@ -18,6 +18,21 @@ python -m pytest -x -q "$@"
 
 if [[ "${SKIP_DOCS_SMOKE:-0}" != "1" ]]; then
     # docs can't rot: run the bash blocks of docs/routing.md +
-    # docs/experiments.md (smallest presets) end to end
+    # docs/experiments.md + docs/simulation.md (smallest presets) end to end
     python scripts/docs_smoke.py
+fi
+
+if [[ "${SKIP_SIM_SMOKE:-0}" != "1" ]]; then
+    # flow-simulator smoke on a tiny fabric: steady-state sim/analytic
+    # agreement (the sim CLI exits nonzero on divergence) + a
+    # degraded-fabric sweep.  A throwaway --out so the reduced smoke
+    # presets never clobber the committed results/experiments artifacts.
+    SIM_SMOKE_OUT="$(mktemp -d)"
+    python -m repro.experiments.run --suite sim \
+        --topos mphx-2p-8x8 --scenarios uniform --loads 0.5 \
+        --out "$SIM_SMOKE_OUT"
+    python -m repro.experiments.run --suite failures \
+        --topos mphx-2p-8x8 dragonfly-small --failures link:0.05 \
+        --out "$SIM_SMOKE_OUT"
+    rm -rf "$SIM_SMOKE_OUT"
 fi

@@ -22,6 +22,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_DOCS = [
     os.path.join("docs", "routing.md"),
     os.path.join("docs", "experiments.md"),
+    os.path.join("docs", "simulation.md"),
 ]
 
 

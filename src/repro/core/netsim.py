@@ -144,30 +144,65 @@ def make_router(topo: Topology, backend: str = "auto",
 
 
 def pattern_throughput(topo: Topology, demands, mode: str = "adaptive",
-                       backend: str = "auto", engine: str = "auto") -> dict:
+                       backend: str = "auto", engine: str = "auto",
+                       simulate: bool = False) -> dict:
     """Saturation throughput of one :class:`~.routing_vec.DemandArrays`
-    traffic matrix on one plane, via the batched engine for ``topo``."""
-    ll = make_router(topo, backend=backend, engine=engine).route(demands, mode)
-    return {
+    traffic matrix on one plane, via the batched engine for ``topo``.
+
+    ``simulate=True`` additionally runs the flow simulator's steady-state
+    load accounting (:mod:`repro.sim.fairshare`) over the same routes and
+    reports the cross-check (``max_util_sim`` and the max absolute
+    utilization difference — the 1e-6 agreement
+    ``results/BENCH_flow_sim.json`` pins).  Requires a fixed path spread
+    (``minimal``, or ``valiant`` on the array engine) — note the default
+    mode here is ``adaptive``, so ``simulate=True`` needs an explicit
+    ``mode``.
+    """
+    if simulate and mode == "adaptive":
+        raise ValueError("simulate=True needs a static path spread "
+                         "(minimal, or valiant on the array engine); "
+                         "adaptive re-routes under load — pass "
+                         "mode='minimal'")
+    router = make_router(topo, backend=backend, engine=engine)
+    ll = router.route(demands, mode)
+    out = {
         "max_util": ll.max_utilization(),
         "mean_util": ll.mean_utilization(),
         "throughput_fraction": ll.saturation_throughput(),
         "total_load_gbps": ll.total_load(),
     }
+    if simulate:
+        from repro.sim.fairshare import flow_incidence
+
+        inc = flow_incidence(router, demands, mode)
+        u_sim = inc.utilization(demands.gbps)
+        u_analytic = ll.utilization_array()
+        out["max_util_sim"] = float(u_sim.max()) if u_sim.size else 0.0
+        out["sim_max_abs_util_diff"] = (
+            float(abs(u_sim - u_analytic).max()) if u_sim.size else 0.0)
+    return out
 
 
 def latency_under_load(topo: Topology, utilization: float,
                        msg_bytes: float = 4096,
-                       net: NetParams = DEFAULT_NET) -> float:
+                       net: NetParams = DEFAULT_NET, router=None) -> float:
     """Average message latency at a given bottleneck utilization.
 
     Flow-level M/M/1-style queueing approximation: each switch hop's service
     time inflates by ``rho / (1 - rho)``.  Saturated (util >= 1) returns inf.
+
+    With a ``router`` (a :func:`make_router` product) the switch-hop count
+    is the router's *measured* mean over NIC-weighted switch pairs
+    (``mean_switch_hops``); without one it falls back to the
+    ``avg_hops() - 2`` heuristic, which over-counts queueing hops on
+    topologies whose NIC-NIC walks are not uniform (e.g. fat-trees where
+    many pairs stay under one leaf).
     """
     if utilization >= 1.0:
         return math.inf
     base = avg_latency(topo, msg_bytes, net)
-    sw_hops = max(topo.avg_hops() - 2.0, 0.0)
+    sw_hops = (router.mean_switch_hops() if router is not None
+               else max(topo.avg_hops() - 2.0, 0.0))
     rho = max(utilization, 0.0)
     return base + sw_hops * net.t_switch * rho / (1.0 - rho)
 
@@ -176,7 +211,9 @@ def load_sweep(topo: Topology, demand_builder, mode: str = "adaptive",
                load_fractions: "list[float]" = (0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
                msg_bytes: float = 4096, backend: str = "auto",
                net: NetParams = DEFAULT_NET,
-               engine: str = "auto", router=None) -> "list[dict]":
+               engine: str = "auto", router=None,
+               simulate: bool = False,
+               flow_time_s: float = 1e-3) -> "list[dict]":
     """Latency/throughput vs offered load for one traffic scenario.
 
     ``demand_builder(topo, offered_per_nic_gbps) -> DemandArrays``.  The
@@ -185,23 +222,38 @@ def load_sweep(topo: Topology, demand_builder, mode: str = "adaptive",
     so each level is simulated independently.  ``engine`` picks the batched
     router (:func:`make_router`): MPHX array engine or generic graph engine;
     pass a prebuilt ``router`` to reuse its graph/BFS state across sweeps.
+
+    ``simulate=True`` adds *measured* flow-completion-time columns per
+    level (``fct_p50_us`` ... ``sim_delivered_fraction``) from the flow
+    simulator (:mod:`repro.sim.events`): each demand pair becomes one
+    finite flow sized to transfer for ``flow_time_s`` at its offered rate,
+    and the event loop reports real FCT percentiles under max-min fair
+    sharing.  Requires a fixed path spread (``minimal``, or ``valiant``
+    on the array engine) — ``adaptive`` has no static per-flow routes.
     """
     if router is None:
         router = make_router(topo, backend=backend, engine=engine)
+    if simulate and mode == "adaptive":
+        raise ValueError("simulate=True needs a static path spread "
+                         "(minimal, or valiant on the array engine); "
+                         "adaptive re-routes under load")
     rows = []
     base_ll = None
+    sim_inc = None
     for frac in load_fractions:
         offered = frac * topo.nic_bw_gbps
+        demands = None
         if frac == 0:
             max_util = 0.0
         elif mode == "adaptive" or base_ll is None:
-            ll = router.route(demand_builder(topo, offered), mode)
+            demands = demand_builder(topo, offered)
+            ll = router.route(demands, mode)
             if mode != "adaptive":
                 base_ll, base_frac = ll, frac
             max_util = ll.max_utilization()
         else:
             max_util = base_ll.max_utilization() * frac / base_frac
-        rows.append({
+        row = {
             "offered_fraction": frac,
             "offered_per_nic_gbps": offered,
             "max_util": round(max_util, 6),
@@ -210,9 +262,23 @@ def load_sweep(topo: Topology, demand_builder, mode: str = "adaptive",
             "delivered_fraction": round(min(frac, frac / max_util)
                                         if max_util > 0 else frac, 6),
             "latency_us": (round(latency_under_load(topo, max_util,
-                                                    msg_bytes, net) * 1e6, 3)
+                                                    msg_bytes, net,
+                                                    router=router) * 1e6, 3)
                            if max_util < 1.0 else None),
-        })
+        }
+        if simulate and frac > 0:
+            from repro.sim.events import simulate_demands
+            from repro.sim.fairshare import flow_incidence
+
+            if demands is None:
+                demands = demand_builder(topo, offered)
+            if sim_inc is None:
+                # static spreads don't depend on offered load — one
+                # extraction serves every level of the sweep
+                sim_inc = flow_incidence(router, demands, mode)
+            row.update(simulate_demands(router, demands, flow_time_s,
+                                        mode=mode, net=net, inc=sim_inc))
+        rows.append(row)
     return rows
 
 

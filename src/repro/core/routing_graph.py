@@ -218,6 +218,90 @@ class GraphRouter:
             f = _row_scatter_add(xp, f, csr.dst, contrib)
         return loads
 
+    def _incidence_to_dests(self, dests: np.ndarray, inject: np.ndarray
+                            ) -> np.ndarray:
+        """Like :meth:`_route_to_dests` but keeps per-column attribution:
+        returns ``(E, C)`` — the load each column's injection places on
+        every edge (numpy; incidence extraction is sim-scale, not 65K)."""
+        csr = self.csr
+        dist_to, frac = self._downhill(dests)
+        f = np.asarray(inject, dtype=np.float64).copy()
+        out = np.zeros((csr.n_edges, dests.shape[0]))
+        for level in range(int(dist_to.max()), 0, -1):
+            fa = f * (dist_to == level)
+            contrib = frac * fa[csr.src]
+            out += contrib
+            np.add.at(f, csr.dst, contrib)
+        return out
+
+    def incidence(self, demands: DemandArrays, mode: str = "minimal"):
+        """Per-flow edge incidence of minimal ECMP routing.
+
+        Returns ``(flow, edge, frac)`` COO arrays: ``frac`` is the fraction
+        of flow ``flow``'s rate on directed edge ``edge``, so
+        scatter-adding ``rates[flow] * frac`` reproduces
+        :meth:`route_minimal`'s loads (flow-simulator steady-state
+        cross-check, ``tests/test_sim.py``).  ``flow`` indexes rows of
+        ``demands``; self-pairs (src == dst) get no entries.  Only
+        ``minimal`` has a static per-flow spread here — ``valiant``
+        averages over every intermediate switch and ``adaptive`` re-routes
+        under load.
+        """
+        if mode != "minimal":
+            raise ValueError(
+                f"no static per-flow incidence for graph-engine mode "
+                f"{mode!r} (valiant averages over all intermediates, "
+                "adaptive re-routes under load); use minimal")
+        src = np.asarray(demands.src, dtype=np.int64)
+        dst = np.asarray(demands.dst, dtype=np.int64)
+        keep = np.flatnonzero(src != dst)
+        pairs = np.stack([src[keep], dst[keep]], axis=1)
+        upairs, pair_of = np.unique(pairs, axis=0, return_inverse=True)
+        # flows grouped by pair: flows_sorted[pair_start[p]:pair_start[p+1]]
+        # are the flow rows sharing unique pair p
+        order = np.argsort(pair_of, kind="stable")
+        flows_sorted = keep[order]
+        pair_start = np.searchsorted(pair_of[order],
+                                     np.arange(upairs.shape[0] + 1))
+        S = self.csr.n_switches
+        chunk = min(self.dst_chunk, 256)
+        flows, edges, fracs = [], [], []
+        for lo in range(0, upairs.shape[0], chunk):
+            cols = np.arange(lo, min(lo + chunk, upairs.shape[0]))
+            inject = np.zeros((S, cols.shape[0]))
+            inject[upairs[cols, 0], np.arange(cols.shape[0])] = 1.0
+            out = self._incidence_to_dests(upairs[cols, 1], inject)
+            # transposed nonzero scan -> entries arrive grouped by column
+            c_idx, e_idx = np.nonzero(out.T)
+            vals = out.T[c_idx, e_idx]
+            # replicate each column's entry block once per flow of its pair
+            n_ent = np.bincount(c_idx, minlength=cols.shape[0])
+            ent_start = np.concatenate(([0], np.cumsum(n_ent)))
+            for ci, p in enumerate(cols):
+                ent = slice(ent_start[ci], ent_start[ci + 1])
+                for f in flows_sorted[pair_start[p]:pair_start[p + 1]]:
+                    flows.append(np.full(int(n_ent[ci]), f, dtype=np.int64))
+                    edges.append(e_idx[ent])
+                    fracs.append(vals[ent])
+        if not flows:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z.copy(), np.zeros(0)
+        return (np.concatenate(flows), np.concatenate(edges),
+                np.concatenate(fracs))
+
+    def mean_switch_hops(self) -> float:
+        """Measured mean switch-switch hops over NIC-weighted switch pairs
+        (``hops[u, u] = 0`` same-switch pairs included — the same uniform
+        NIC-pair convention as ``MPHX.avg_hops() - 2``)."""
+        nics = self.csr.nic_counts.astype(np.float64)
+        w = nics / nics.sum()
+        return float(w @ self.hops @ w)
+
+    def edge_capacity(self) -> np.ndarray:
+        """(E,) directed-edge capacity in Gbps (shared router interface
+        with :class:`~repro.core.routing_vec.VectorizedHyperXRouter`)."""
+        return self.csr.cap
+
     def _zeros(self):
         return backend_zeros(self.xp, self.csr.n_edges)
 

@@ -379,24 +379,31 @@ class VectorizedHyperXRouter:
     def _zeros(self):
         return backend_zeros(self.xp, self.index.n_slots)
 
+    def _iter_minimal_hops(self, src, cs, cd):
+        """Yield ``(slots, mask)`` per hop of every D! full-dimension
+        ordering — the single source of truth for the minimal walk, shared
+        by load accounting (:meth:`_walk_minimal`) and per-flow incidence
+        extraction (:meth:`incidence`, for the flow simulator)."""
+        idx = self.index
+        for perm in itertools.permutations(range(idx.D)):
+            cur_id = src.copy()
+            cur = cs.copy()
+            for i in perm:
+                mask = cur[:, i] != cd[:, i]
+                if mask.any():   # skip the O(M) slot math on matched dims
+                    yield idx.slots(cur_id, i, cd[:, i]), mask
+                cur_id = cur_id + (cd[:, i] - cur[:, i]) * idx.stride[i]
+                cur[:, i] = cd[:, i]
+
     def _walk_minimal(self, loads, src, gbps, cs, cd, perm_weight):
         """Add minimal ECMP loads.  ``perm_weight`` (M,) is the Gbps each of
         the D! full-dimension orderings carries for each demand; a distinct
         mismatched-dim ordering is induced by D!/m! full orderings, so every
         minimal path receives ``perm_weight * D!/m!`` total — set
         ``perm_weight = gbps/D!`` for the plain gbps/m! ECMP split."""
-        idx, xp = self.index, self.xp
-        for perm in itertools.permutations(range(idx.D)):
-            cur_id = src.copy()
-            cur = cs.copy()
-            for i in perm:
-                mask = cur[:, i] != cd[:, i]
-                if mask.any():
-                    slots = idx.slots(cur_id, i, cd[:, i])
-                    loads = _scatter_add(xp, loads, slots[mask],
-                                         perm_weight[mask])
-                cur_id = cur_id + (cd[:, i] - cur[:, i]) * idx.stride[i]
-                cur[:, i] = cd[:, i]
+        xp = self.xp
+        for slots, mask in self._iter_minimal_hops(src, cs, cd):
+            loads = _scatter_add(xp, loads, slots[mask], perm_weight[mask])
         return loads
 
     def _mismatch_stats(self, cs, cd):
@@ -427,6 +434,28 @@ class VectorizedHyperXRouter:
                                    gbps / n_perms)
         return ArrayLinkLoads(self.index, loads)
 
+    def _iter_deroute_hops(self, src, cs, cd, mism):
+        """Yield ``(slots, mask)`` per hop of every single-deroute DAL path
+        (src -> dim ``i`` := ``via`` -> fix dims in index order) — shared by
+        :meth:`route_valiant` and :meth:`incidence`."""
+        idx = self.index
+        dims = self.topo.dims
+        for i in range(idx.D):
+            for via in range(dims[i]):
+                mask = mism[:, i] & (cs[:, i] != via) & (cd[:, i] != via)
+                if not mask.any():
+                    continue
+                yield idx.slots(src, i, np.full_like(src, via)), mask
+                cur_id = src + (via - cs[:, i]) * idx.stride[i]
+                cur = cs.copy()
+                cur[:, i] = via
+                for j in range(idx.D):
+                    step = mask & (cur[:, j] != cd[:, j])
+                    if step.any():   # skip the O(M) slot math on idle hops
+                        yield idx.slots(cur_id, j, cd[:, j]), step
+                    cur_id = cur_id + (cd[:, j] - cur[:, j]) * idx.stride[j]
+                    cur[:, j] = cd[:, j]
+
     def route_valiant(self, demands: DemandArrays) -> ArrayLinkLoads:
         """Minimal + all single-deroute DAL paths, load split equally —
         the legacy ``mode="valiant"`` spread, computed in one batch."""
@@ -442,26 +471,77 @@ class VectorizedHyperXRouter:
         loads = self._walk_minimal(self._zeros(), src, gbps, cs, cd,
                                    per_path * n_minimal / n_full)
         # deroute component: src -> (dim i := via) -> fix dims in index order
-        dims = self.topo.dims
-        for i in range(idx.D):
-            for via in range(dims[i]):
-                mask = mism[:, i] & (cs[:, i] != via) & (cd[:, i] != via)
-                if not mask.any():
-                    continue
-                slots = idx.slots(src, i, np.full_like(src, via))
-                loads = _scatter_add(xp, loads, slots[mask], per_path[mask])
-                cur_id = src + (via - cs[:, i]) * idx.stride[i]
-                cur = cs.copy()
-                cur[:, i] = via
-                for j in range(idx.D):
-                    step = mask & (cur[:, j] != cd[:, j])
-                    if step.any():
-                        slots = idx.slots(cur_id, j, cd[:, j])
-                        loads = _scatter_add(xp, loads, slots[step],
-                                             per_path[step])
-                    cur_id = cur_id + (cd[:, j] - cur[:, j]) * idx.stride[j]
-                    cur[:, j] = cd[:, j]
+        for slots, mask in self._iter_deroute_hops(src, cs, cd, mism):
+            loads = _scatter_add(xp, loads, slots[mask], per_path[mask])
         return ArrayLinkLoads(self.index, loads)
+
+    # ------------------------------------------------- per-flow incidence ----
+
+    def incidence(self, demands: DemandArrays, mode: str = "minimal"):
+        """Per-flow edge incidence of a fixed-spread routing mode.
+
+        Returns ``(flow, slot, frac)`` COO int64/int64/float64 arrays where
+        ``frac`` is the fraction of flow ``flow``'s rate carried on edge
+        slot ``slot`` — so scatter-adding ``rates[flow] * frac`` over slots
+        reproduces :meth:`route`'s loads exactly (the flow simulator's
+        steady-state cross-validation, ``tests/test_sim.py``).  ``flow``
+        indexes rows of ``demands``.  Supported modes are the fixed path
+        spreads: ``minimal`` (ordering ECMP) and ``valiant`` (DAL
+        deroutes); ``adaptive`` re-routes under load and has no static
+        incidence.
+        """
+        src, dst, gbps, cs, cd = self._prep(demands)
+        n_full = math.factorial(self.index.D)
+        flows, slots_l, fracs = [], [], []
+
+        def emit(slots, mask, w):
+            f = np.flatnonzero(mask)
+            if f.size:
+                flows.append(f)
+                slots_l.append(slots[mask])
+                fracs.append(w[mask] if w.ndim else np.full(f.size, w))
+
+        if mode == "minimal":
+            w = np.float64(1.0 / n_full)
+            for slots, mask in self._iter_minimal_hops(src, cs, cd):
+                emit(slots, mask, w)
+        elif mode == "valiant":
+            if np.any(src == dst):
+                raise ValueError("valiant routing expects src != dst demands")
+            mism, m, n_minimal, n_deroute = self._mismatch_stats(cs, cd)
+            n_paths = (n_minimal + n_deroute).astype(np.float64)
+            w_min = n_minimal / (n_paths * n_full)
+            w_der = 1.0 / n_paths
+            for slots, mask in self._iter_minimal_hops(src, cs, cd):
+                emit(slots, mask, w_min)
+            for slots, mask in self._iter_deroute_hops(src, cs, cd, mism):
+                emit(slots, mask, w_der)
+        else:
+            raise ValueError(
+                f"no static per-flow incidence for mode {mode!r} "
+                "(adaptive re-routes under load); use minimal or valiant")
+        if not flows:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z.copy(), np.zeros(0)
+        flow = np.concatenate(flows)
+        slot = np.concatenate(slots_l)
+        frac = np.concatenate(fracs)
+        # coalesce duplicate (flow, slot) entries
+        key = flow * np.int64(self.index.n_slots) + slot
+        uniq, inv = np.unique(key, return_inverse=True)
+        out = np.zeros(uniq.size)
+        np.add.at(out, inv, frac)
+        return (uniq // self.index.n_slots, uniq % self.index.n_slots, out)
+
+    def mean_switch_hops(self) -> float:
+        """Expected switch-switch minimal hops over uniform NIC pairs
+        (coordinates differ in dim ``i`` with probability ``(D_i-1)/D_i``)."""
+        return float(sum((d - 1) / d for d in self.topo.dims if d > 1))
+
+    def edge_capacity(self) -> np.ndarray:
+        """(n_slots,) per-edge-slot capacity in Gbps (shared router
+        interface with :class:`~repro.core.routing_graph.GraphRouter`)."""
+        return self.index.capacity
 
     # ------------------------------------------------- parallel UGAL/DAL ----
 

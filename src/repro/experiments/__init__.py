@@ -9,18 +9,26 @@ whole traffic matrices in one shot:
   patterns + collective chunk schedules) with a registry;
 * :mod:`~repro.experiments.sweep`     — suite runners: Table-2 topology
   comparison, latency/throughput-vs-load sweeps;
-* :mod:`~repro.experiments.artifacts` — JSON + markdown artifact writers;
+* :mod:`~repro.experiments.simsuite`  — flow-simulator suites: measured
+  FCTs (``sim``) and degraded fabrics (``failures``), on
+  :mod:`repro.sim`;
+* :mod:`~repro.experiments.artifacts` — JSON + markdown artifact writers
+  (schema v3);
 * :mod:`~repro.experiments.run`       — the CLI
   (``python -m repro.experiments.run --suite table2``).
 """
 
 from .scenarios import SCENARIOS, Scenario, available_scenarios, get_scenario
+from .simsuite import (DEFAULT_FAILURE_SPECS, DEFAULT_SIM_SCENARIOS,
+                       DEFAULT_SIM_TOPOS, run_failures_suite, run_sim_suite)
 from .sweep import (DEFAULT_SWEEP_TOPOS, ROUTING_MODES, SWEEP_TOPOLOGIES,
                     run_sweep_suite, run_table2_suite, sweep_topology)
 from .artifacts import markdown_table, write_json, write_markdown
 
 __all__ = [
     "SCENARIOS", "Scenario", "available_scenarios", "get_scenario",
+    "DEFAULT_FAILURE_SPECS", "DEFAULT_SIM_SCENARIOS", "DEFAULT_SIM_TOPOS",
+    "run_failures_suite", "run_sim_suite",
     "DEFAULT_SWEEP_TOPOS", "ROUTING_MODES", "SWEEP_TOPOLOGIES",
     "run_sweep_suite", "run_table2_suite", "sweep_topology",
     "markdown_table", "write_json", "write_markdown",

@@ -1,11 +1,11 @@
 """JSON + markdown artifact writers for experiment suites.
 
-Artifact schema (``schema_version`` 2):
+Artifact schema (``schema_version`` 3):
 
 ```json
 {
-  "schema_version": 2,
-  "suite": "table2" | "sweep",
+  "schema_version": 3,
+  "suite": "table2" | "sweep" | "sim" | "failures",
   "generated_by": "repro.experiments",
   "params": { ... suite parameters ... },
   "rows": [ { ... flat record ... }, ... ]
@@ -18,6 +18,17 @@ table, for review in PRs).
 
 Schema history:
 
+* **v3** — two new suites from the flow-level fabric simulator
+  (``repro.sim``): ``sim`` rows carry measured FCT percentiles
+  (``fct_p50_us`` / ``fct_p95_us`` / ``fct_p99_us``, ``slowdown_*``,
+  ``sim_delivered_fraction``), steady-state cross-validation rows
+  (``sim_max_abs_util_diff``), and measured-vs-analytic collective rows;
+  ``failures`` rows carry the failure spec label plus degraded-throughput
+  and recovery-phase records.  ``sweep`` rows gain the same FCT columns
+  when run with ``--simulate``; existing table2/sweep columns are
+  unchanged (sweep ``latency_us`` now derives switch hops from the
+  routing engine's measured mean instead of the ``avg_hops - 2``
+  heuristic).
 * **v2** — sweep rows gained an ``engine`` column (``"array"`` = MPHX
   coordinate engine, ``"graph"`` = generic SwitchGraph engine), and
   undefined (topology, scenario) cells are recorded as explicit
@@ -33,7 +44,7 @@ import json
 import os
 from typing import Sequence
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 
 def artifact_payload(suite: str, params: dict, rows: list[dict]) -> dict:

@@ -6,12 +6,16 @@ Examples::
     PYTHONPATH=src python -m repro.experiments.run --suite sweep \
         --topos mphx-2p-8x8 mphx-4p-86x9 --scenarios uniform neighbor_shift \
         --modes minimal adaptive --loads 0.25 0.5 1.0
+    PYTHONPATH=src python -m repro.experiments.run --suite sim \
+        --topos mphx-2p-8x8 --scenarios uniform --loads 0.5 0.9
+    PYTHONPATH=src python -m repro.experiments.run --suite failures \
+        --topos mphx-2p-8x8 dragonfly-small --failures link:0.01 plane:1
     PYTHONPATH=src python -m repro.experiments.run --suite all
 
 Artifacts land in ``--out`` (default ``results/experiments``):
-``table2.json`` / ``table2.md`` and ``sweep.json`` / ``sweep.md``; the JSON
-schema is documented in :mod:`repro.experiments.artifacts` and
-``docs/experiments.md``.
+``{table2,sweep,sim,failures}.{json,md}``; the JSON schema (v3) is
+documented in :mod:`repro.experiments.artifacts` and
+``docs/experiments.md`` / ``docs/simulation.md``.
 """
 
 from __future__ import annotations
@@ -19,17 +23,21 @@ from __future__ import annotations
 import argparse
 import sys
 
+from repro.sim.failures import parse_failure_spec
 from .scenarios import SCENARIOS
+from .simsuite import (DEFAULT_FAILURE_SPECS, run_failures_suite,
+                       run_sim_suite)
 from .sweep import (DEFAULT_OUTDIR, DEFAULT_SWEEP_TOPOS, SWEEP_TOPOLOGIES,
                     run_sweep_suite, run_table2_suite)
+
+SUITES = ["table2", "sweep", "sim", "failures", "all"]
 
 
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.experiments.run",
         description="MPHX experiment sweeps (paper §6 evaluation)")
-    p.add_argument("--suite", choices=["table2", "sweep", "all"],
-                   default="all")
+    p.add_argument("--suite", choices=SUITES, default="all")
     p.add_argument("--out", default=DEFAULT_OUTDIR,
                    help="artifact directory (default results/experiments)")
     p.add_argument("--topos", nargs="+", choices=sorted(SWEEP_TOPOLOGIES),
@@ -40,24 +48,58 @@ def build_parser() -> argparse.ArgumentParser:
                    "ones are recorded as skipped)")
     p.add_argument("--modes", nargs="+",
                    choices=["minimal", "valiant", "adaptive"], default=None,
-                   help="routing modes (default: all three)")
+                   help="routing modes (default: all three; the sim suite "
+                   "always routes minimal — the static path spread both "
+                   "engines share)")
     p.add_argument("--engine", choices=["auto", "array", "graph"],
                    default="auto",
                    help="routing engine (auto: array for MPHX, graph "
-                   "for baseline topologies)")
+                   "for baseline topologies; failures always re-route on "
+                   "graph — forcing array yields skip records)")
     p.add_argument("--loads", nargs="+", type=float,
-                   default=[0.1, 0.25, 0.5, 0.75, 0.9, 1.0],
-                   help="offered load fractions of NIC bandwidth")
+                   default=None,
+                   help="offered load fractions of NIC bandwidth "
+                   "(default: 0.1..1.0 for sweep, 0.5 0.9 for sim)")
     p.add_argument("--msg-bytes", type=float, default=4096)
     p.add_argument("--backend", choices=["auto", "numpy", "jax"],
                    default="auto")
     p.add_argument("--collective-mb", type=float, default=256.0,
                    help="all-reduce payload for the table2 suite")
+    p.add_argument("--simulate", action="store_true",
+                   help="sweep suite: add measured-FCT columns from the "
+                   "flow simulator (minimal mode only)")
+    p.add_argument("--flow-time-us", type=float, default=200.0,
+                   help="sim: flow size as transfer seconds at the "
+                   "offered rate (default 200us)")
+    p.add_argument("--sim-collective-mb", type=float, default=16.0,
+                   help="sim suite: measured-collective payload per NIC")
+    p.add_argument("--failures", nargs="+", default=None,
+                   metavar="SPEC",
+                   help="failure specs for the failures suite, e.g. "
+                   "'link:0.01' 'link:0.01,plane:1' 'switch:0.02,seed:3' "
+                   f"(default: {' '.join(DEFAULT_FAILURE_SPECS)}); "
+                   "topologies whose engine lacks re-route support get "
+                   "explicit skip records")
+    p.add_argument("--failure-load", type=float, default=0.5,
+                   help="offered load fraction for the failures suite")
+    p.add_argument("--failure-mode",
+                   choices=["minimal", "valiant", "adaptive"],
+                   default="adaptive",
+                   help="routing mode for degraded-fabric re-routing")
     return p
 
 
 def main(argv: "list[str] | None" = None) -> int:
     args = build_parser().parse_args(argv)
+    rc = 0
+    if args.failures is not None:
+        try:
+            specs = [parse_failure_spec(s) for s in args.failures]
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+    else:
+        specs = None
     if args.suite in ("table2", "all"):
         payload = run_table2_suite(args.out, args.collective_mb,
                                    args.msg_bytes)
@@ -66,13 +108,43 @@ def main(argv: "list[str] | None" = None) -> int:
     if args.suite in ("sweep", "all"):
         payload = run_sweep_suite(
             args.out, topo_names=args.topos, scenario_names=args.scenarios,
-            modes=args.modes, load_fractions=tuple(args.loads),
+            modes=args.modes,
+            load_fractions=tuple(args.loads) if args.loads
+            else (0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
             msg_bytes=args.msg_bytes, backend=args.backend,
-            engine=args.engine)
+            engine=args.engine, simulate=args.simulate,
+            flow_time_s=args.flow_time_us * 1e-6)
         print(f"sweep: {payload['params']['n_routed_rows']} routed rows, "
               f"{payload['params']['n_skipped']} skipped -> "
               f"{args.out}/sweep.json, {args.out}/sweep.md")
-    return 0
+    if args.suite in ("sim", "all"):
+        payload = run_sim_suite(
+            args.out, topo_names=args.topos, scenario_names=args.scenarios,
+            load_fractions=tuple(args.loads) if args.loads else (0.5, 0.9),
+            flow_time_s=args.flow_time_us * 1e-6,
+            msg_bytes=args.msg_bytes,
+            collective_mb=args.sim_collective_mb,
+            backend=args.backend, engine=args.engine)
+        agree = payload["params"]["all_steady_checks_agree_1e-6"]
+        print(f"sim: {len(payload['rows'])} rows "
+              f"(steady-state agreement: {agree}) -> "
+              f"{args.out}/sim.json, {args.out}/sim.md")
+        if agree is False:
+            # remember the failure but keep going — the failures suite
+            # below is independent and its artifacts must still land
+            print("sim: FAIL — simulator steady-state loads diverge from "
+                  "the analytic engine (>1e-6)", file=sys.stderr)
+            rc = 1
+    if args.suite in ("failures", "all"):
+        payload = run_failures_suite(
+            args.out, topo_names=args.topos,
+            scenario_names=args.scenarios, failure_specs=specs,
+            offered_fraction=args.failure_load, mode=args.failure_mode,
+            backend=args.backend, engine=args.engine)
+        print(f"failures: {payload['params']['n_rows']} rows, "
+              f"{payload['params']['n_skipped']} skipped -> "
+              f"{args.out}/failures.json, {args.out}/failures.md")
+    return rc
 
 
 if __name__ == "__main__":

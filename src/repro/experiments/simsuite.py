@@ -1,0 +1,315 @@
+"""Flow-simulator experiment suites: measured FCTs and degraded fabrics.
+
+* :func:`run_sim_suite` — for each (topology, scenario): a steady-state
+  cross-validation row (simulator load accounting vs the analytic engine,
+  the 1e-6 agreement), measured-FCT rows per offered load from the event
+  loop (:mod:`repro.sim.events`), and measured-vs-analytic collective
+  rows (:mod:`repro.sim.collective_sim`).
+* :func:`run_failures_suite` — degraded-fabric sweeps: for each
+  (topology, failure spec, scenario), healthy-vs-degraded throughput and
+  the three-phase recovery curve (:mod:`repro.sim.failures`).  Topologies
+  whose engine lacks re-route support (forced ``--engine array``, or no
+  explicit switch graph) produce explicit skip records, never silent
+  drops.
+
+Both write schema-v3 JSON + markdown artifacts
+(:mod:`~repro.experiments.artifacts`).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+from repro.core.netsim import load_sweep, make_router, resolve_engine
+from repro.core.topology import Topology
+from repro.sim.collective_sim import SIM_COLLECTIVES, simulate_collective
+from repro.sim.failures import (FailureSpec, failure_throughput,
+                                parse_failure_spec, recovery_curve)
+from repro.sim.fairshare import flow_incidence
+from .artifacts import (artifact_payload, markdown_table, write_json,
+                        write_markdown)
+from .scenarios import get_scenario
+from .sweep import DEFAULT_OUTDIR, SWEEP_TOPOLOGIES
+
+DEFAULT_SIM_TOPOS = ["mphx-2p-8x8", "dragonfly-small"]
+DEFAULT_SIM_SCENARIOS = ["uniform", "neighbor_shift"]
+DEFAULT_FAILURE_SPECS = ["link:0.01", "link:0.05"]
+
+# the simulator needs a static per-flow path spread; adaptive re-routes
+# under load and valiant on the graph engine averages over every
+# intermediate — minimal is the mode both engines share
+SIM_MODE = "minimal"
+
+
+def _sim_topo_rows(topo: Topology, scenario_names, load_fractions,
+                   flow_time_s, msg_bytes, backend, engine,
+                   collective_mb) -> "list[dict]":
+    engine_name = resolve_engine(topo, engine)
+    router = make_router(topo, backend=backend, engine=engine)
+    graph = getattr(router, "graph", None)
+    rows = []
+    for name in scenario_names:
+        sc = get_scenario(name)
+        reason = sc.skip_reason(topo)
+        if reason is not None:
+            print(f"sim: skipping scenario {name!r} on {topo.name!r}: "
+                  f"{reason}", file=sys.stderr)
+            rows.append({"topology": topo.name, "scenario": name,
+                         "kind": "skip", "engine": engine_name,
+                         "skipped": True, "reason": reason})
+            continue
+        build = lambda t, o, sc=sc: sc.build(t, o, graph=graph)
+        # steady-state cross-validation at full injection
+        dem = build(topo, topo.nic_bw_gbps)
+        ll = router.route(dem, SIM_MODE)
+        inc = flow_incidence(router, dem, SIM_MODE)
+        u_sim = inc.utilization(dem.gbps)
+        diff = float(abs(u_sim - ll.utilization_array()).max()) \
+            if u_sim.size else 0.0
+        rows.append({"topology": topo.name, "scenario": name,
+                     "kind": "steady_check", "mode": SIM_MODE,
+                     "engine": engine_name,
+                     "max_util_analytic": round(ll.max_utilization(), 6),
+                     "max_util_sim": round(float(u_sim.max()), 6)
+                     if u_sim.size else 0.0,
+                     "max_abs_util_diff": diff,
+                     "agrees_1e-6": bool(diff < 1e-6)})
+        # measured FCTs per load level
+        t0 = time.perf_counter()
+        sweep = load_sweep(topo, build, mode=SIM_MODE,
+                           load_fractions=load_fractions,
+                           msg_bytes=msg_bytes, backend=backend,
+                           engine=engine, router=router, simulate=True,
+                           flow_time_s=flow_time_s)
+        dt = time.perf_counter() - t0
+        for r in sweep:
+            rows.append({"topology": topo.name, "scenario": name,
+                         "kind": "fct", "mode": SIM_MODE,
+                         "engine": engine_name, **r,
+                         "sim_wall_s": round(dt, 4)})
+    # measured collectives (every registered collective schedule kind)
+    for kind in SIM_COLLECTIVES:
+        t0 = time.perf_counter()
+        row = simulate_collective(topo, kind,
+                                  collective_mb * 2**20, router=router,
+                                  mode=SIM_MODE, backend=backend)
+        rows.append({"kind": "collective", "mode": SIM_MODE,
+                     "engine": engine_name, **row,
+                     "sim_wall_s": round(time.perf_counter() - t0, 4)})
+    return rows
+
+
+def run_sim_suite(outdir: str = DEFAULT_OUTDIR,
+                  topo_names: "list[str] | None" = None,
+                  scenario_names: "list[str] | None" = None,
+                  load_fractions=(0.5, 0.9),
+                  flow_time_s: float = 200e-6,
+                  msg_bytes: float = 4096,
+                  collective_mb: float = 16.0,
+                  backend: str = "auto",
+                  engine: str = "auto") -> dict:
+    """Run the flow simulator over (topology, scenario, load) cells and
+    write ``sim.json`` / ``sim.md``."""
+    names = topo_names or list(DEFAULT_SIM_TOPOS)
+    scenario_names = scenario_names or list(DEFAULT_SIM_SCENARIOS)
+    all_rows = []
+    for tn in names:
+        topo = SWEEP_TOPOLOGIES[tn]
+        try:
+            resolve_engine(topo, engine)
+        except ValueError as e:
+            print(f"sim: skipping topology {topo.name!r}: {e}",
+                  file=sys.stderr)
+            all_rows.append({"topology": topo.name, "scenario": "*",
+                             "engine": engine, "skipped": True,
+                             "reason": str(e)})
+            continue
+        all_rows += _sim_topo_rows(topo, scenario_names, load_fractions,
+                                   flow_time_s, msg_bytes, backend, engine,
+                                   collective_mb)
+    checks = [r for r in all_rows if r.get("kind") == "steady_check"]
+    payload = artifact_payload(
+        "sim",
+        {"topologies": names, "scenarios": scenario_names,
+         "mode": SIM_MODE, "load_fractions": list(load_fractions),
+         "flow_time_s": flow_time_s, "msg_bytes": msg_bytes,
+         "collective_mb": collective_mb, "backend": backend,
+         "engine": engine,
+         "n_steady_checks": len(checks),
+         "all_steady_checks_agree_1e-6":
+             bool(all(r["agrees_1e-6"] for r in checks)) if checks
+             else None,
+         "n_skipped": sum(1 for r in all_rows if r.get("skipped"))},
+        all_rows)
+    write_json(os.path.join(outdir, "sim.json"), payload)
+    sections = [
+        ("", "Measured flow-completion times from the event-driven "
+             "flow simulator (`repro.sim`), cross-validated against the "
+             "analytic routing engines (see `docs/simulation.md`)."),
+        ("Steady-state cross-validation (sim vs analytic loads)",
+         markdown_table(checks,
+                        ["topology", "scenario", "engine",
+                         "max_util_analytic", "max_util_sim",
+                         "max_abs_util_diff", "agrees_1e-6"])),
+        ("Measured FCTs",
+         markdown_table([r for r in all_rows if r.get("kind") == "fct"],
+                        ["topology", "scenario", "offered_fraction",
+                         "max_util", "sim_delivered_fraction",
+                         "fct_p50_us", "fct_p99_us", "slowdown_mean",
+                         "slowdown_p99", "sim_stalled"])),
+        ("Collectives: measured vs analytic",
+         markdown_table([r for r in all_rows
+                         if r.get("kind") == "collective"],
+                        ["topology", "collective", "bytes_per_nic", "steps",
+                         "measured_us", "analytic_us", "analytic_algo",
+                         "measured_over_analytic"])),
+    ]
+    skipped = [r for r in all_rows if r.get("skipped")]
+    if skipped:
+        sections.append(("Skipped",
+                         markdown_table(skipped,
+                                        ["topology", "scenario",
+                                         "reason"])))
+    write_markdown(os.path.join(outdir, "sim.md"),
+                   "Flow-level simulation — measured FCTs & collectives",
+                   sections)
+    return payload
+
+
+def run_failures_suite(outdir: str = DEFAULT_OUTDIR,
+                       topo_names: "list[str] | None" = None,
+                       scenario_names: "list[str] | None" = None,
+                       failure_specs: "list[str | FailureSpec] | None" = None,
+                       offered_fraction: float = 0.5,
+                       mode: str = "adaptive",
+                       backend: str = "auto",
+                       engine: str = "auto") -> dict:
+    """Degraded-fabric sweep over (topology, failure spec, scenario) and
+    write ``failures.json`` / ``failures.md``.
+
+    Degraded fabrics re-route on the generic graph engine; a forced
+    ``engine="array"`` (no re-route support) or a topology without an
+    explicit switch graph yields one explicit skip record per cell.
+    """
+    names = topo_names or list(DEFAULT_SIM_TOPOS)
+    scenario_names = scenario_names or ["uniform"]
+    specs = [parse_failure_spec(s) if isinstance(s, str) else s
+             for s in (failure_specs or DEFAULT_FAILURE_SPECS)]
+    rows = []
+    for tn in names:
+        topo = SWEEP_TOPOLOGIES[tn]
+        offered = offered_fraction * topo.nic_bw_gbps
+        if engine == "array":
+            reason = ("array engine lacks failure re-route support "
+                      "(coordinate walks assume an intact mesh); use "
+                      "engine=auto/graph")
+            print(f"failures: skipping topology {topo.name!r}: {reason}",
+                  file=sys.stderr)
+            rows.append({"topology": topo.name, "failures": "*",
+                         "skipped": True, "reason": reason})
+            continue
+        try:
+            topo.build_graph()
+        except NotImplementedError as e:
+            print(f"failures: skipping topology {topo.name!r}: {e}",
+                  file=sys.stderr)
+            rows.append({"topology": topo.name, "failures": "*",
+                         "skipped": True, "reason": str(e)})
+            continue
+        for spec in specs:
+            if spec.planes_down >= topo.n_planes:
+                rows.append({"topology": topo.name,
+                             "failures": spec.label(), "skipped": True,
+                             "reason": f"planes_down={spec.planes_down} "
+                                       f">= {topo.n_planes} planes"})
+                continue
+            for name in scenario_names:
+                sc = get_scenario(name)
+                reason = sc.skip_reason(topo)
+                if reason is None and spec.switch_fraction > 0 \
+                        and sc.graph_builder is None:
+                    # dead switches change the NIC set, so demands must be
+                    # rebuilt from the degraded graph — coordinate-only
+                    # scenarios cannot
+                    reason = (f"scenario {name!r} has no graph builder "
+                              "for switch-failure demand rebuild")
+                if reason is not None:
+                    rows.append({"topology": topo.name,
+                                 "failures": spec.label(),
+                                 "scenario": name, "skipped": True,
+                                 "reason": reason})
+                    continue
+                if spec.switch_fraction > 0:
+                    build = lambda t, o, g, sc=sc: sc.graph_builder(
+                        t, o, graph=g)
+                else:
+                    build = lambda t, o, g, sc=sc: sc.build(t, o, graph=g)
+                t0 = time.perf_counter()
+                try:
+                    ft = failure_throughput(topo, build, spec, offered,
+                                            mode=mode, backend=backend)
+                    phases = recovery_curve(topo, build, spec, offered,
+                                            mode=mode, backend=backend,
+                                            throughput_row=ft)
+                except ValueError as e:
+                    # survivors disconnected: an explicit skip record
+                    # (no silent drops), flagged so it lands in the
+                    # markdown skip table and n_skipped
+                    rows.append({"topology": topo.name,
+                                 "failures": spec.label(),
+                                 "scenario": name, "skipped": True,
+                                 "disconnected": True, "reason": str(e)})
+                    continue
+                dt = round(time.perf_counter() - t0, 4)
+                rows.append({"topology": topo.name,
+                             "failures": spec.label(), "scenario": name,
+                             "kind": "throughput",
+                             "offered_fraction": offered_fraction,
+                             **ft, "sim_wall_s": dt})
+                for ph in phases:
+                    rows.append({"topology": topo.name,
+                                 "failures": spec.label(),
+                                 "scenario": name, "kind": "recovery",
+                                 "mode": mode, **ph})
+    routed = [r for r in rows if not r.get("skipped")]
+    payload = artifact_payload(
+        "failures",
+        {"topologies": names, "scenarios": scenario_names,
+         "failure_specs": [s.label() for s in specs],
+         "offered_fraction": offered_fraction, "mode": mode,
+         "backend": backend, "engine": engine,
+         "n_rows": len(routed),
+         "n_skipped": sum(1 for r in rows if r.get("skipped"))},
+        rows)
+    write_json(os.path.join(outdir, "failures.json"), payload)
+    sections = [
+        ("", "Degraded-fabric evaluation: link/switch/plane failures are "
+             "masked out of the switch graph and survivors re-route on "
+             "the generic graph engine (see `docs/simulation.md`)."),
+        ("Healthy vs degraded throughput",
+         markdown_table([r for r in routed
+                         if r.get("kind") == "throughput"],
+                        ["topology", "failures", "scenario", "mode",
+                         "healthy_max_util", "degraded_max_util",
+                         "throughput_retained", "plane_capacity_factor",
+                         "failed_links", "failed_switches"])),
+        ("Recovery phases",
+         markdown_table([r for r in routed
+                         if r.get("kind") == "recovery"],
+                        ["topology", "failures", "scenario", "phase",
+                         "delivered_fraction", "stalled_share",
+                         "max_util"])),
+    ]
+    skipped = [r for r in rows if r.get("skipped")]
+    if skipped:
+        sections.append(
+            ("Skipped (no re-route support / undefined cell / "
+             "disconnected survivors)",
+             markdown_table(skipped, ["topology", "failures", "scenario",
+                                      "reason"])))
+    write_markdown(os.path.join(outdir, "failures.md"),
+                   "Failure injection — degraded throughput & recovery",
+                   sections)
+    return payload

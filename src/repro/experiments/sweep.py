@@ -141,7 +141,9 @@ def sweep_topology(topo: Topology, scenario_names: "list[str] | None" = None,
                    load_fractions=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
                    msg_bytes: float = 4096,
                    backend: str = "auto",
-                   engine: str = "auto") -> list[dict]:
+                   engine: str = "auto",
+                   simulate: bool = False,
+                   flow_time_s: float = 200e-6) -> list[dict]:
     """Latency/throughput-vs-load rows for one topology instance.
 
     Returns routed rows plus, for every requested scenario that does not
@@ -176,11 +178,15 @@ def sweep_topology(topo: Topology, scenario_names: "list[str] | None" = None,
         build = lambda t, o, sc=sc: sc.build(t, o, graph=graph)
         mode_list = modes if modes is not None else list(ROUTING_MODES)
         for mode in mode_list:
+            # the flow simulator needs a static per-flow path spread —
+            # measured FCT columns ride only the minimal-mode rows
+            sim_here = simulate and mode == "minimal"
             t0 = time.perf_counter()
             sweep = load_sweep(topo, build, mode=mode,
                                load_fractions=load_fractions,
                                msg_bytes=msg_bytes, backend=backend,
-                               engine=engine, router=router)
+                               engine=engine, router=router,
+                               simulate=sim_here, flow_time_s=flow_time_s)
             dt = time.perf_counter() - t0
             for r in sweep:
                 rows.append({"topology": topo.name, "scenario": name,
@@ -197,7 +203,9 @@ def run_sweep_suite(outdir: str = DEFAULT_OUTDIR,
                     load_fractions=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
                     msg_bytes: float = 4096,
                     backend: str = "auto",
-                    engine: str = "auto") -> dict:
+                    engine: str = "auto",
+                    simulate: bool = False,
+                    flow_time_s: float = 200e-6) -> dict:
     """Sweep every (topology, scenario, mode, load) cell and write artifacts."""
     names = topo_names or list(DEFAULT_SWEEP_TOPOS)
     all_rows = []
@@ -205,7 +213,7 @@ def run_sweep_suite(outdir: str = DEFAULT_OUTDIR,
         topo = SWEEP_TOPOLOGIES[tn]
         all_rows += sweep_topology(topo, scenario_names, modes,
                                    load_fractions, msg_bytes, backend,
-                                   engine)
+                                   engine, simulate, flow_time_s)
     routed = [r for r in all_rows if not r.get("skipped")]
     skipped = [r for r in all_rows if r.get("skipped")]
     payload = artifact_payload(
@@ -215,6 +223,7 @@ def run_sweep_suite(outdir: str = DEFAULT_OUTDIR,
          "modes": modes or list(ROUTING_MODES),
          "load_fractions": list(load_fractions),
          "msg_bytes": msg_bytes, "backend": backend, "engine": engine,
+         "simulate": simulate,
          "n_routed_rows": len(routed), "n_skipped": len(skipped)},
         all_rows)
     write_json(os.path.join(outdir, "sweep.json"), payload)

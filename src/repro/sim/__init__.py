@@ -1,0 +1,31 @@
+"""repro.sim — vectorized flow-level fabric simulator (time domain).
+
+Layers on the batched routing engines: per-flow edge incidence
+(:mod:`.fairshare`) + max-min fair water-filling give measured flow
+completion times (:mod:`.events`), plane spraying with skew/failure
+re-spray (:mod:`.spray`), link/switch/plane failure injection with
+re-routing (:mod:`.failures`), and measured collective schedules
+(:mod:`.collective_sim`).  ``docs/simulation.md`` is the guide.
+"""
+
+from .collective_sim import SIM_COLLECTIVES, simulate_collective
+from .events import (FlowSimResult, FlowSpec, flows_to_demands,
+                     path_latency, simulate_demands, simulate_flows,
+                     simulate_incidence)
+from .failures import (DegradedGraph, FailureSpec, degrade_graph,
+                       degraded_router, failure_throughput,
+                       parse_failure_spec, plane_capacity_factor,
+                       recovery_curve)
+from .fairshare import FlowIncidence, flow_incidence, max_min_rates
+from .spray import SprayedSimResult, simulate_sprayed
+
+__all__ = [
+    "SIM_COLLECTIVES", "simulate_collective",
+    "FlowSimResult", "FlowSpec", "flows_to_demands", "path_latency",
+    "simulate_demands", "simulate_flows", "simulate_incidence",
+    "DegradedGraph", "FailureSpec", "degrade_graph", "degraded_router",
+    "failure_throughput", "parse_failure_spec", "plane_capacity_factor",
+    "recovery_curve",
+    "FlowIncidence", "flow_incidence", "max_min_rates",
+    "SprayedSimResult", "simulate_sprayed",
+]

@@ -1,0 +1,245 @@
+"""Event-driven flow-level simulation loop.
+
+Finite flows start, share the fabric max-min fairly, and complete; the
+loop advances time between start/completion events, re-solving fair
+shares (:func:`repro.sim.fairshare.max_min_rates`) each epoch.  This
+turns the analytic engines' asymptotic utilizations into *measured* flow
+completion times (FCTs) — the FatPaths-style evaluation the closed forms
+cannot give.
+
+Conventions (matching :mod:`repro.core.netsim`): sizes are bytes,
+rates/capacities Gbps, times seconds.  A flow's FCT is its transfer time
+(size over its time-varying fair share) plus the path alpha term
+``t_nic + sw_hops * t_switch + (sw_hops + 2) * t_prop`` where ``sw_hops``
+is the flow's expected hop count from the incidence tensor — so an
+uncontended flow's FCT is exactly the closed-form
+``bytes / min(rate_cap, bottleneck) + alpha`` bound
+(``tests/test_sim.py`` pins it).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.netsim import DEFAULT_NET, NetParams, gbps_to_Bps
+from repro.core.routing_vec import DemandArrays
+from .fairshare import FlowIncidence, flow_incidence, max_min_rates
+
+
+@dataclass(frozen=True)
+class FlowSpec:
+    """One finite flow: ``size_bytes`` from switch ``src`` to ``dst``."""
+
+    src: int
+    dst: int
+    size_bytes: float
+    start_s: float = 0.0
+
+
+def flows_to_demands(flows: "list[FlowSpec]") -> DemandArrays:
+    return DemandArrays(
+        np.array([f.src for f in flows], dtype=np.int64),
+        np.array([f.dst for f in flows], dtype=np.int64),
+        np.ones(len(flows)))
+
+
+@dataclass
+class FlowSimResult:
+    """Per-flow outcome of one fabric simulation."""
+
+    start_s: np.ndarray        # (F,)
+    finish_s: np.ndarray       # (F,) transfer-complete time (inf = stalled)
+    fct_s: np.ndarray          # (F,) finish - start + path alpha term
+    latency_s: np.ndarray      # (F,) the per-flow path alpha term
+    size_bytes: np.ndarray     # (F,)
+    edge_bytes: np.ndarray     # (E,) bytes carried per edge
+    incidence: FlowIncidence
+    makespan_s: float = 0.0    # last finish (stalled flows excluded)
+    n_epochs: int = 0
+
+    @property
+    def stalled(self) -> np.ndarray:
+        return ~np.isfinite(self.finish_s)
+
+    def transfer_s(self) -> np.ndarray:
+        return self.finish_s - self.start_s
+
+    def fct_percentiles(self, qs=(50, 95, 99)) -> dict:
+        ok = self.fct_s[~self.stalled]
+        if ok.size == 0:
+            return {f"p{q}": None for q in qs}
+        return {f"p{q}": float(np.percentile(ok, q)) for q in qs}
+
+    def slowdown(self, rate_caps_gbps: np.ndarray) -> np.ndarray:
+        """(F,) FCT over the uncontended closed-form FCT at each flow's
+        own rate cap (1.0 = no queueing/contention inflation)."""
+        caps = np.broadcast_to(np.asarray(rate_caps_gbps, dtype=np.float64),
+                               self.size_bytes.shape)
+        bneck = self.incidence.bottleneck_gbps()
+        ideal = (self.size_bytes / gbps_to_Bps(np.minimum(caps, bneck))
+                 + self.latency_s)
+        return self.fct_s / ideal
+
+    def delivered_gbps(self) -> float:
+        """Aggregate delivered injection rate over the makespan."""
+        done = self.size_bytes[~self.stalled].sum()
+        return float(done * 8 / 1e9 / self.makespan_s) \
+            if self.makespan_s > 0 else 0.0
+
+    def mean_utilization_weighted(self) -> np.ndarray:
+        """(E,) time-averaged edge utilization over the makespan."""
+        cap = self.incidence.capacity
+        if self.makespan_s <= 0:
+            return np.zeros_like(cap)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            gbps = self.edge_bytes * 8 / 1e9 / self.makespan_s
+            return np.where(cap > 0, gbps / cap, 0.0)
+
+
+def path_latency(inc: FlowIncidence, net: NetParams = DEFAULT_NET
+                 ) -> np.ndarray:
+    """(F,) per-flow path alpha term from the incidence hop counts
+    (+2 access hops, same hop convention as ``netsim.avg_latency``)."""
+    sw = inc.switch_hops()
+    return (net.t_nic + sw * net.t_switch
+            + (sw + 2.0) * net.t_prop_per_hop)
+
+
+def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
+                       start_s=None, net: NetParams = DEFAULT_NET,
+                       backend: str = "numpy") -> FlowSimResult:
+    """Run the event loop over a prebuilt incidence tensor.
+
+    ``size_bytes`` / ``rate_caps_gbps`` / ``start_s`` broadcast to (F,).
+    Active flows whose fair share is 0 (every path crosses a
+    zero-capacity edge — e.g. after failure injection) are marked stalled
+    (``finish_s = inf``) rather than looping forever.
+    """
+    F = inc.n_flows
+    size = np.broadcast_to(np.asarray(size_bytes, dtype=np.float64),
+                           (F,)).copy()
+    caps = np.broadcast_to(np.asarray(rate_caps_gbps, dtype=np.float64),
+                           (F,)).copy()
+    start = (np.zeros(F) if start_s is None else
+             np.broadcast_to(np.asarray(start_s, dtype=np.float64),
+                             (F,)).copy())
+    if np.any(size < 0) or np.any(caps <= 0):
+        raise ValueError("sizes must be >= 0 and rate caps > 0")
+    remaining = size.copy()
+    finish = np.full(F, np.inf)
+    finish[size == 0] = start[size == 0]
+    edge_bytes = np.zeros(inc.n_edges)
+    stalled = np.zeros(F, dtype=bool)
+    t = float(start.min()) if F else 0.0
+    eps = 1e-9
+    n_epochs = 0
+    # each epoch completes a flow, admits an arrival batch, or stalls a
+    # dead flow set — so 4F + 8 bounds any run
+    for _ in range(4 * F + 8):
+        open_f = (remaining > eps * np.maximum(size, 1.0)) & ~stalled
+        active = open_f & (start <= t * (1 + 1e-12) + 1e-18)
+        pending = start[open_f & ~active]
+        if not active.any():
+            if pending.size == 0:
+                break
+            t = float(pending.min())
+            continue
+        n_epochs += 1
+        rates = max_min_rates(inc, caps, active=active, backend=backend)
+        rates = np.where(active, rates, 0.0)
+        dead = active & (rates <= 0)
+        if dead.any() and pending.size == 0:
+            stalled |= dead
+            active &= ~dead
+            if not active.any():
+                continue
+        Bps = gbps_to_Bps(rates[active])
+        dt_fin = float((remaining[active] / np.maximum(Bps, 1e-30)).min())
+        dt_arr = float(pending.min() - t) if pending.size else np.inf
+        dt = min(dt_fin, dt_arr)
+        moved = gbps_to_Bps(rates) * dt
+        remaining = np.maximum(remaining - moved, 0.0)
+        np.add.at(edge_bytes, inc.edge,
+                  moved[inc.flow] * inc.frac)
+        t += dt
+        just_done = active & (remaining <= eps * np.maximum(size, 1.0))
+        finish[just_done] = t
+    else:
+        raise RuntimeError(f"flow sim failed to converge ({F} flows)")
+    lat = path_latency(inc, net)
+    fct = finish - start + lat
+    done = np.isfinite(finish)
+    return FlowSimResult(
+        start_s=start, finish_s=finish, fct_s=fct, latency_s=lat,
+        size_bytes=size, edge_bytes=edge_bytes, incidence=inc,
+        makespan_s=float((finish[done] - start.min()).max())
+        if done.any() else 0.0,
+        n_epochs=n_epochs)
+
+
+def simulate_flows(router, flows: "list[FlowSpec]", mode: str = "minimal",
+                   rate_cap_gbps: "float | np.ndarray | None" = None,
+                   net: NetParams = DEFAULT_NET,
+                   backend: str = "numpy") -> FlowSimResult:
+    """Simulate a list of :class:`FlowSpec` on one plane's fabric.
+
+    ``router`` is a batched router (``netsim.make_router``); routes come
+    from its ``mode`` path spread.  ``rate_cap_gbps`` defaults to the
+    topology's per-plane port bandwidth (each flow is one NIC port's
+    traffic on this plane).
+    """
+    dem = flows_to_demands(flows)
+    inc = flow_incidence(router, dem, mode)
+    if rate_cap_gbps is None:
+        rate_cap_gbps = router.topo.port_gbps if hasattr(router, "topo") \
+            else router.graph.link_gbps
+    return simulate_incidence(
+        inc, np.array([f.size_bytes for f in flows]),
+        rate_cap_gbps,
+        np.array([f.start_s for f in flows]), net=net, backend=backend)
+
+
+def simulate_demands(router, demands: DemandArrays, flow_time_s: float,
+                     mode: str = "minimal", net: NetParams = DEFAULT_NET,
+                     backend: str = "numpy",
+                     inc: "FlowIncidence | None" = None) -> dict:
+    """Measured-FCT summary of one traffic matrix at its offered rates.
+
+    Each demand row becomes one flow sized so that at its offered Gbps it
+    transfers for exactly ``flow_time_s`` (so under zero contention every
+    FCT is ``flow_time_s + alpha`` and slowdown is 1.0).  Returns the flat
+    row the sweep/sim suites merge into their artifacts.
+
+    The static path spreads don't depend on the offered rates, so a
+    caller sweeping load levels of one scenario can extract ``inc`` once
+    and pass it in — it must come from a demand matrix with the same
+    (src, dst) rows.
+    """
+    gbps = np.asarray(demands.gbps, dtype=np.float64)
+    if inc is None:
+        inc = flow_incidence(router, demands, mode)
+    res = simulate_incidence(inc, gbps_to_Bps(gbps) * flow_time_s, gbps,
+                             net=net, backend=backend)
+    pct = res.fct_percentiles()
+    slow = res.slowdown(gbps)
+    ok = ~res.stalled
+    offered = float(gbps.sum())
+    return {
+        "sim_flows": int(inc.n_flows),
+        "sim_epochs": res.n_epochs,
+        "sim_stalled": int(res.stalled.sum()),
+        "sim_delivered_fraction":
+            round(res.delivered_gbps() / offered, 6) if offered else 1.0,
+        "fct_p50_us": round(pct["p50"] * 1e6, 3)
+            if pct["p50"] is not None else None,
+        "fct_p95_us": round(pct["p95"] * 1e6, 3)
+            if pct["p95"] is not None else None,
+        "fct_p99_us": round(pct["p99"] * 1e6, 3)
+            if pct["p99"] is not None else None,
+        "slowdown_mean": round(float(slow[ok].mean()), 4) if ok.any()
+            else None,
+        "slowdown_p99": round(float(np.percentile(slow[ok], 99)), 4)
+            if ok.any() else None,
+    }

@@ -1,0 +1,277 @@
+"""Link / switch / plane failure injection (degraded-fabric evaluation).
+
+The resilience axis the analytic stack could not express: sample physical
+link and switch failures out of a topology's :class:`SwitchGraph`, rebuild
+the CSR routing state over the survivors, and measure degraded throughput
+and recovery behaviour.  Degraded fabrics always route on the generic
+graph engine (:class:`~repro.core.routing_graph.GraphRouter`) — the MPHX
+array engine's coordinate arithmetic assumes an intact mesh, so MPHX
+degrades through its own ``build_graph()`` (explicit skip records are
+emitted for engines without re-route support, never silent drops).
+
+Whole-plane failures are handled at the spray layer (surviving planes
+re-carry ``n / alive`` of the load, delivering at most ``alive / n`` —
+:func:`repro.core.planes.plane_failure_degradation`); this module folds
+that factor into the degraded-throughput rows.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.routing_graph import GraphRouter
+from repro.core.topology import SwitchGraph, Topology
+from .fairshare import flow_incidence
+
+
+@dataclass(frozen=True)
+class FailureSpec:
+    """What to break: fractions of physical links / switches, whole planes."""
+
+    link_fraction: float = 0.0
+    switch_fraction: float = 0.0
+    planes_down: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0 <= self.link_fraction < 1):
+            raise ValueError("link_fraction must be in [0, 1)")
+        if not (0 <= self.switch_fraction < 1):
+            raise ValueError("switch_fraction must be in [0, 1)")
+        if self.planes_down < 0:
+            raise ValueError("planes_down must be >= 0")
+
+    @property
+    def is_noop(self) -> bool:
+        return (self.link_fraction == 0 and self.switch_fraction == 0
+                and self.planes_down == 0)
+
+    def label(self) -> str:
+        parts = []
+        if self.link_fraction:
+            parts.append(f"link:{self.link_fraction:g}")
+        if self.switch_fraction:
+            parts.append(f"switch:{self.switch_fraction:g}")
+        if self.planes_down:
+            parts.append(f"plane:{self.planes_down}")
+        return ",".join(parts) or "none"
+
+
+def parse_failure_spec(text: str) -> FailureSpec:
+    """Parse the CLI grammar ``link:0.01,switch:0.02,plane:1[,seed:3]``."""
+    kw: dict = {}
+    keys = {"link": "link_fraction", "switch": "switch_fraction",
+            "plane": "planes_down", "seed": "seed"}
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if ":" not in part:
+            raise ValueError(
+                f"bad failure spec {part!r}: expected key:value with key "
+                f"in {sorted(keys)} (e.g. 'link:0.01,plane:1')")
+        k, v = part.split(":", 1)
+        k = k.strip().lower()
+        if k not in keys:
+            raise ValueError(f"unknown failure key {k!r} in {text!r}; "
+                             f"known: {sorted(keys)}")
+        kw[keys[k]] = int(v) if keys[k] in ("planes_down", "seed") \
+            else float(v)
+    return FailureSpec(**kw)
+
+
+@dataclass
+class DegradedGraph:
+    """A failed-down copy of a :class:`SwitchGraph` plus what broke.
+
+    Surviving switches are *compacted* (dead nodes dropped, survivors
+    renumbered 0..S'-1 via ``node_map``) so the graph stays BFS-routable;
+    with link-only failures ``node_map`` is the identity and healthy-id
+    demand matrices transfer unchanged.  ``failed_switches`` and
+    ``fully_failed_edges`` are in HEALTHY ids (for pre-reroute loss
+    estimates on the healthy fabric's incidence).
+    """
+
+    graph: SwitchGraph
+    node_map: np.ndarray         # (S_healthy,) old -> new id, -1 = dead
+    failed_switches: list        # healthy ids
+    failed_links: float          # physical links removed (multiplicity sum)
+    fully_failed_edges: list     # healthy-id (u, v) with no surviving links
+    total_links: float
+
+    def info(self) -> dict:
+        return {
+            "failed_switches": len(self.failed_switches),
+            "failed_links": round(self.failed_links, 3),
+            "fully_failed_edges": len(self.fully_failed_edges),
+            "failed_link_fraction":
+                round(self.failed_links / self.total_links, 6)
+                if self.total_links else 0.0,
+        }
+
+
+def degrade_graph(graph: SwitchGraph, spec: FailureSpec) -> DegradedGraph:
+    """Sample failures from ``spec`` and rebuild the surviving multigraph.
+
+    Each physical link fails independently with ``link_fraction``
+    (trunked edges lose a Binomial share of their multiplicity); each
+    switch fails with ``switch_fraction``, dropping all incident links and
+    its NICs.
+    """
+    rng = np.random.default_rng(spec.seed)
+    S = graph.n_switches
+    dead = np.zeros(S, dtype=bool)
+    if spec.switch_fraction > 0:
+        dead = rng.random(S) < spec.switch_fraction
+        if dead.all():
+            dead[int(rng.integers(S))] = False
+    node_map = np.full(S, -1, dtype=np.int64)
+    node_map[~dead] = np.arange(int((~dead).sum()))
+    out = SwitchGraph(int((~dead).sum()), graph.nics_per_switch,
+                      graph.link_gbps,
+                      name=f"{graph.name} (degraded {spec.label()})",
+                      nic_nodes=[int(node_map[u]) for u in graph.nic_nodes
+                                 if not dead[u]])
+    failed_links = 0.0
+    fully_failed = []
+    for u in range(S):
+        for v, m in graph.adj[u].items():
+            if v < u:
+                continue
+            if dead[u] or dead[v]:
+                failed_links += m
+                continue
+            keep = m
+            if spec.link_fraction > 0:
+                n_phys = max(1, int(round(m)))
+                k_fail = rng.binomial(n_phys, spec.link_fraction)
+                keep = m * (1.0 - k_fail / n_phys)
+            if keep <= 0:
+                failed_links += m
+                fully_failed.append((u, v))
+                continue
+            failed_links += m - keep
+            out.add_edge(int(node_map[u]), int(node_map[v]), keep,
+                         tier=graph.tier.get((u, v), ""))
+    return DegradedGraph(out, node_map, [int(u) for u in np.flatnonzero(dead)],
+                         failed_links, fully_failed, graph.total_links())
+
+
+def degraded_router(topo: Topology, spec: FailureSpec,
+                    backend: str = "auto"):
+    """(GraphRouter over the degraded fabric, DegradedGraph).
+
+    Raises ``NotImplementedError`` if ``topo`` has no explicit switch
+    graph, ``ValueError`` if the failures disconnect the fabric — callers
+    (the failures suite) turn both into explicit artifact records.
+    """
+    dg = degrade_graph(topo.build_graph(), spec)
+    router = GraphRouter(dg.graph, backend=backend)
+    router.hops  # force the BFS: raises ValueError when disconnected
+    return router, dg
+
+
+def plane_capacity_factor(topo: Topology, spec: FailureSpec) -> float:
+    """Delivered-bandwidth factor of whole-plane failures: survivors
+    re-carry the sprayed load, so at most ``alive / n`` gets through."""
+    n = topo.n_planes
+    if spec.planes_down >= n:
+        raise ValueError(f"planes_down={spec.planes_down} >= {n} planes")
+    return (n - spec.planes_down) / n
+
+
+def failure_throughput(topo: Topology, demand_builder, spec: FailureSpec,
+                       offered_per_nic_gbps: float, mode: str = "adaptive",
+                       backend: str = "auto") -> dict:
+    """Healthy-vs-degraded saturation throughput for one traffic matrix.
+
+    ``demand_builder(topo, offered, graph) -> DemandArrays`` (the scenario
+    ``build`` signature).  Both sides route on the graph engine so the
+    comparison is apples-to-apples; surviving planes carry ``n / alive``
+    of the sprayed load when planes are down.
+    """
+    healthy_g = topo.build_graph()
+    healthy = GraphRouter(healthy_g, backend=backend)
+    router, dg = degraded_router(topo, spec, backend=backend)
+    factor = plane_capacity_factor(topo, spec)
+    scale = 1.0 / factor                   # per-surviving-plane load
+    dem_h = demand_builder(topo, offered_per_nic_gbps, healthy_g)
+    dem_d = demand_builder(topo, offered_per_nic_gbps * scale, dg.graph)
+    ll_h = healthy.route(dem_h, mode)
+    ll_d = router.route(dem_d, mode)
+    thpt_h = ll_h.saturation_throughput()
+    thpt_d = ll_d.saturation_throughput() * factor
+    return {
+        "mode": mode,
+        "healthy_max_util": round(ll_h.max_utilization(), 6),
+        "degraded_max_util": round(ll_d.max_utilization(), 6),
+        "healthy_throughput_fraction": round(thpt_h, 6),
+        "degraded_throughput_fraction": round(thpt_d, 6),
+        "throughput_retained": round(thpt_d / thpt_h, 6) if thpt_h else 0.0,
+        "plane_capacity_factor": round(factor, 6),
+        **dg.info(),
+    }
+
+
+def recovery_curve(topo: Topology, demand_builder, spec: FailureSpec,
+                   offered_per_nic_gbps: float, mode: str = "adaptive",
+                   backend: str = "auto",
+                   throughput_row: "dict | None" = None) -> "list[dict]":
+    """Three-phase degraded-fabric curve for one traffic matrix.
+
+    * ``healthy`` — routed throughput on the intact fabric;
+    * ``failed`` — failures hit, survivors have NOT re-routed: traffic
+      still follows healthy minimal paths, so the share of each flow's
+      ECMP spread crossing a fully-failed edge stalls (first-order
+      estimate from the incidence tensor);
+    * ``rerouted`` — survivors re-route on the degraded graph (graph
+      engine, ``mode``), planes re-spray.
+
+    Pass a precomputed :func:`failure_throughput` record as
+    ``throughput_row`` to reuse its degraded routing for the
+    ``rerouted`` phase instead of re-deriving it.
+    """
+    healthy_g = topo.build_graph()
+    healthy = GraphRouter(healthy_g, backend=backend)
+    dem = demand_builder(topo, offered_per_nic_gbps, healthy_g)
+    ll_h = healthy.route(dem, mode)
+    rows = [{"phase": "healthy", "delivered_fraction":
+             round(min(1.0, ll_h.saturation_throughput()), 6),
+             "max_util": round(ll_h.max_utilization(), 6)}]
+    dg = degrade_graph(healthy_g, spec)
+    # pre-reroute: flows lose the ECMP share that crossed failed edges
+    inc = flow_incidence(healthy, dem, "minimal")
+    csr = healthy.csr
+    gone = {tuple(e) for e in dg.fully_failed_edges}
+    dead = set(dg.failed_switches)
+    edge_ids = np.array(
+        [e for e, (u, v) in enumerate(zip(csr.src.tolist(),
+                                          csr.dst.tolist()))
+         if (min(u, v), max(u, v)) in gone or u in dead or v in dead],
+        dtype=np.int64)
+    lost = inc.edge_share(edge_ids) if edge_ids.size else \
+        np.zeros(dem.n)
+    g = np.asarray(dem.gbps)
+    factor = plane_capacity_factor(topo, spec)
+    stall_delivered = float((g * (1 - lost)).sum() / g.sum()) if g.sum() \
+        else 1.0
+    rows.append({"phase": "failed",
+                 "delivered_fraction":
+                     round(min(1.0, ll_h.saturation_throughput())
+                           * stall_delivered * factor, 6),
+                 "stalled_share": round(1 - stall_delivered, 6)})
+    try:
+        rr = throughput_row if throughput_row is not None else \
+            failure_throughput(topo, demand_builder, spec,
+                               offered_per_nic_gbps, mode, backend)
+        rows.append({"phase": "rerouted",
+                     "delivered_fraction":
+                         round(min(1.0,
+                                   rr["degraded_throughput_fraction"]), 6),
+                     "max_util": rr["degraded_max_util"]})
+    except ValueError as e:           # disconnected survivors
+        rows.append({"phase": "rerouted", "disconnected": True,
+                     "reason": str(e)})
+    return rows

@@ -1,0 +1,159 @@
+"""Batched max-min fair bandwidth allocation (the flow simulator's core).
+
+A routed flow set becomes a *flow-incidence tensor*: COO arrays
+``(flow, edge, frac)`` where ``frac`` is the fraction of flow ``f``'s rate
+crossing directed edge ``e`` — extracted from the routing engines'
+own walk code (``VectorizedHyperXRouter.incidence`` /
+``GraphRouter.incidence``), so the simulator's load accounting is the
+analytic engines' load accounting by construction (pinned to 1e-6 by
+``tests/test_sim.py`` and ``results/BENCH_flow_sim.json``).
+
+Fair shares come from classic progressive water-filling: all unfrozen
+flows raise their rate at the same pace until an edge saturates (freezing
+every flow crossing it) or a flow hits its demand cap, repeated until all
+flows freeze.  Each round is a handful of scatter-adds over the COO
+entries — ``numpy`` or ``jax.numpy`` backend, the same
+:func:`~repro.core.routing_vec.get_backend` contract as the routing
+engines (``auto`` picks jax only under x64, preserving the equivalence
+tolerances).
+
+All rates and capacities are Gbps; ``frac`` is dimensionless.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.routing_vec import DemandArrays, _scatter_add, get_backend
+
+
+@dataclass
+class FlowIncidence:
+    """Per-flow edge usage of a routed flow set, plus edge capacities.
+
+    ``flow`` / ``edge`` / ``frac`` are parallel COO arrays (coalesced:
+    one entry per (flow, edge) pair); ``capacity`` is the per-edge Gbps of
+    the router that produced the incidence.  ``sum_e frac[f, e]`` is flow
+    ``f``'s expected switch-switch hop count (every unit of flow crosses
+    each hop of its path spread once).
+    """
+
+    flow: np.ndarray       # (NNZ,) int64 flow index
+    edge: np.ndarray       # (NNZ,) int64 directed-edge id / edge slot
+    frac: np.ndarray       # (NNZ,) float64 fraction of the flow's rate
+    n_flows: int
+    capacity: np.ndarray   # (E,) Gbps
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.capacity.shape[0])
+
+    def loads(self, rates_gbps: np.ndarray) -> np.ndarray:
+        """(E,) offered Gbps per edge when flow ``f`` runs at
+        ``rates_gbps[f]`` — the steady-state link loads."""
+        out = np.zeros(self.n_edges)
+        np.add.at(out, self.edge, np.asarray(rates_gbps)[self.flow]
+                  * self.frac)
+        return out
+
+    def utilization(self, rates_gbps: np.ndarray) -> np.ndarray:
+        l = self.loads(rates_gbps)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return np.where(self.capacity > 0, l / self.capacity, 0.0)
+
+    def switch_hops(self) -> np.ndarray:
+        """(F,) expected switch-switch hops per flow (0 for flows with no
+        fabric path, e.g. src == dst)."""
+        out = np.zeros(self.n_flows)
+        np.add.at(out, self.flow, self.frac)
+        return out
+
+    def bottleneck_gbps(self) -> np.ndarray:
+        """(F,) max rate each flow could sustain *alone* on an idle
+        fabric: ``min_e capacity[e] / frac[f, e]`` over its edges
+        (inf for flows with no fabric path)."""
+        out = np.full(self.n_flows, np.inf)
+        with np.errstate(divide="ignore"):
+            per_entry = self.capacity[self.edge] / self.frac
+        np.minimum.at(out, self.flow, per_entry)
+        return out
+
+    def edge_share(self, edges: np.ndarray) -> np.ndarray:
+        """(F,) fraction of each flow's rate crossing any edge in
+        ``edges`` (clipped to 1) — first-order stalled share when those
+        edges fail before re-routing (:mod:`repro.sim.failures`)."""
+        sel = np.isin(self.edge, edges)
+        out = np.zeros(self.n_flows)
+        np.add.at(out, self.flow[sel], self.frac[sel])
+        return np.minimum(out, 1.0)
+
+
+def flow_incidence(router, demands: DemandArrays,
+                   mode: str = "minimal") -> FlowIncidence:
+    """Extract the per-flow incidence tensor from a batched router
+    (:func:`repro.core.netsim.make_router` product: MPHX array engine or
+    generic graph engine — both expose ``incidence`` and
+    ``edge_capacity``)."""
+    flow, edge, frac = router.incidence(demands, mode)
+    return FlowIncidence(flow, edge, frac, demands.n,
+                         np.asarray(router.edge_capacity(),
+                                    dtype=np.float64))
+
+
+def max_min_rates(inc: FlowIncidence, rate_caps_gbps: np.ndarray,
+                  active: "np.ndarray | None" = None,
+                  backend: str = "numpy") -> np.ndarray:
+    """(F,) max-min fair rates by progressive water-filling.
+
+    Every active flow's rate rises at unit pace until either an edge
+    saturates (``sum_f frac * rate == capacity`` — all flows crossing it
+    freeze) or the flow reaches its own ``rate_caps_gbps`` demand cap.
+    Inactive flows hold rate 0 and consume nothing.  Terminates in at most
+    F + E rounds (each round freezes a flow or saturates an edge); rounds
+    are O(NNZ) scatter-adds on the selected backend.
+    """
+    _, xp = get_backend(backend)
+    F, E = inc.n_flows, inc.n_edges
+    caps = np.broadcast_to(np.asarray(rate_caps_gbps, dtype=np.float64),
+                           (F,))
+    if not np.all(np.isfinite(caps)):
+        raise ValueError("rate caps must be finite (a flow with no fabric "
+                         "path would otherwise fill forever)")
+    if active is None:
+        active = np.ones(F, dtype=bool)
+    flow = xp.asarray(inc.flow)
+    edge = xp.asarray(inc.edge)
+    frac = xp.asarray(inc.frac)
+    cap_e = xp.asarray(inc.capacity)
+    caps_x = xp.asarray(caps)
+    scale = float(max(np.max(inc.capacity, initial=0.0),
+                      caps.max() if F else 0.0, 1.0))
+    tol = 1e-12 * scale
+    rates = xp.zeros(F)
+    unfrozen = xp.asarray(active.copy())
+    cap_left = cap_e
+    for _ in range(F + E + 2):
+        if not bool(unfrozen.any()):
+            break
+        live = xp.where(unfrozen[flow], frac, 0.0)
+        wsum = _scatter_add(xp, xp.zeros(E), edge, live)
+        open_e = wsum > tol
+        delta_e = xp.where(open_e, cap_left / xp.where(open_e, wsum, 1.0),
+                           xp.inf)
+        delta_f = xp.where(unfrozen, caps_x - rates, xp.inf)
+        delta = float(xp.minimum(delta_e.min() if E else xp.inf,
+                                 delta_f.min()))
+        delta = max(delta, 0.0)
+        rates = xp.where(unfrozen, rates + delta, rates)
+        cap_left = cap_left - delta * wsum
+        sat = open_e & (cap_left <= tol)
+        on_sat = _scatter_add(xp, xp.zeros(F), flow,
+                              xp.where(sat[edge], frac, 0.0)) > 0
+        capped = rates >= caps_x - tol
+        unfrozen = unfrozen & ~on_sat & ~capped
+    else:
+        raise RuntimeError("water-filling failed to converge "
+                           f"({F} flows, {E} edges)")
+    return np.asarray(rates)

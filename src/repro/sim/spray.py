@@ -1,0 +1,121 @@
+"""Plane spraying on the simulated fabric (paper §2 on measured FCTs).
+
+A sprayed flow splits into per-plane subflows by the NIC's whole-chunk
+round-robin schedule (:func:`repro.core.planes.split_chunks`); every
+plane is an identical fabric copy, so each plane runs the same incidence
+tensor over its own subflow sizes.  A flow completes when its *slowest*
+plane does (max over planes) — plane skew multiplies a plane's transfer
+time, a dead plane (skew = inf) re-sprays its bytes over survivors, and
+per-chunk overheads are charged per plane.  The uncontended single-flow
+case reproduces :func:`repro.core.planes.spray_completion_time` exactly
+when all planes are alive (any skew), and for dead planes when per-chunk
+overhead is zero and survivors are unskewed (``tests/test_sim.py``):
+re-sprayed bytes here are added to the survivor subflows *before*
+chunking and skewing — they incur chunk overhead and survivor skew,
+where ``planes.py`` charges them as overhead-free unskewed transfer
+time.  Under contention the byte-level model is the honest one.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.netsim import DEFAULT_NET, NetParams, make_router
+from repro.core.planes import SprayConfig
+from .events import (FlowSpec, flows_to_demands, path_latency,
+                     simulate_incidence)
+from .fairshare import flow_incidence
+
+
+@dataclass
+class SprayedSimResult:
+    """Per-flow sprayed completion over all planes."""
+
+    completion_s: np.ndarray      # (F,) max-over-planes FCT incl. alpha
+    plane_transfer_s: np.ndarray  # (F, n_planes) skewed transfer+overhead
+    per_plane_bytes: np.ndarray   # (F, n_planes) bytes after re-spray
+    latency_s: np.ndarray         # (F,) path alpha term (charged once)
+    stalled: np.ndarray           # (F,) bool
+
+    @property
+    def makespan_s(self) -> float:
+        ok = self.completion_s[~self.stalled]
+        return float(ok.max()) if ok.size else 0.0
+
+
+def _per_plane_bytes(sizes: np.ndarray, cfg: SprayConfig) -> np.ndarray:
+    """(F, n) whole-chunk round-robin split of each flow (vectorized
+    :func:`repro.core.planes.split_chunks`)."""
+    n = cfg.n_planes
+    c = cfg.chunk_bytes
+    out = np.zeros((sizes.shape[0], n))
+    n_chunks = np.ceil(sizes / c).astype(np.int64)
+    full, rem = np.divmod(n_chunks, n)
+    out += full[:, None] * c
+    # planes 0..rem-1 get one extra chunk each
+    extra = np.arange(n)[None, :] < rem[:, None]
+    out += extra * c
+    # the final (possibly partial) chunk lands on plane (n_chunks-1) % n
+    tail = sizes - (n_chunks - 1) * c
+    has = n_chunks > 0
+    last = (n_chunks - 1) % n
+    out[np.arange(sizes.shape[0])[has], last[has]] += tail[has] - c
+    return out
+
+
+def simulate_sprayed(topo, flows: "list[FlowSpec]",
+                     cfg: "SprayConfig | None" = None,
+                     mode: str = "minimal",
+                     plane_skew: "list[float] | None" = None,
+                     rate_cap_gbps: "float | None" = None,
+                     net: NetParams = DEFAULT_NET,
+                     engine: str = "auto", backend: str = "numpy",
+                     router=None) -> SprayedSimResult:
+    """Simulate sprayed flows across all ``topo.n_planes`` planes.
+
+    ``plane_skew[k] >= 1`` multiplies plane ``k``'s transfer time
+    (congested/degraded plane); ``inf`` marks a dead plane whose bytes are
+    re-sprayed evenly over the survivors before simulation.  All planes
+    share one incidence tensor (identical fabric copies), so the cost is
+    ``n_alive`` event-loop runs over the same routes.
+    """
+    cfg = cfg or SprayConfig(n_planes=topo.n_planes)
+    skew = list(plane_skew or [1.0] * cfg.n_planes)
+    if len(skew) != cfg.n_planes:
+        raise ValueError("plane_skew length mismatch")
+    if router is None:
+        router = make_router(topo, backend="auto", engine=engine)
+    sizes = np.array([f.size_bytes for f in flows], dtype=np.float64)
+    starts = np.array([f.start_s for f in flows])
+    per_plane = _per_plane_bytes(sizes, cfg)
+    alive = [k for k, s in enumerate(skew) if not math.isinf(s)]
+    if not alive:
+        raise RuntimeError("all planes down")
+    dead = [k for k in range(cfg.n_planes) if k not in alive]
+    if dead:
+        extra = per_plane[:, dead].sum(axis=1) / len(alive)
+        per_plane[:, dead] = 0.0
+        for k in alive:
+            per_plane[:, k] += extra
+    inc = flow_incidence(router, flows_to_demands(flows), mode)
+    cap = rate_cap_gbps if rate_cap_gbps is not None else topo.port_gbps
+    F = sizes.shape[0]
+    plane_t = np.zeros((F, cfg.n_planes))
+    stalled = np.zeros(F, dtype=bool)
+    for k in alive:
+        res = simulate_incidence(inc, per_plane[:, k], cap,
+                                 start_s=starts, net=net, backend=backend)
+        n_chunks = np.ceil(per_plane[:, k] / cfg.chunk_bytes)
+        transfer = res.transfer_s() + n_chunks * cfg.per_chunk_overhead_s
+        plane_t[:, k] = transfer * skew[k]
+        stalled |= res.stalled
+    lat = path_latency(inc, net)
+    completion = plane_t.max(axis=1) + lat
+    completion[stalled] = np.inf
+    return SprayedSimResult(completion_s=completion,
+                            plane_transfer_s=plane_t,
+                            per_plane_bytes=per_plane,
+                            latency_s=lat, stalled=stalled)
