@@ -9,6 +9,7 @@ quantity's latency in us where the bench IS a latency model).
   routing     — minimal vs DAL adaptive throughput     (§5.2)
   traffic     — synthetic-traffic + collective sweep   (§6 future work)
   collectives — JAX multi-plane collective equivalence + wall time
+  cosim       — training-step co-sim on the fabric     (§6 future work)
   spray       — NIC plane-spraying efficiency model    (§2)
   roofline    — per (arch x shape) roofline terms from the dry-run
 """
@@ -506,6 +507,65 @@ def bench_flow_sim():
          f"cross_validates={'yes' if ok else 'NO'}")
 
 
+# ------------------------------------------------- step co-simulation ----
+
+
+def bench_cosim():
+    """Training-step co-simulation: measured step time & tokens/sec for
+    two MoE configs on a small MPHX (both routing engines) and two
+    Table-2 baseline fabrics.  Writes results/BENCH_cosim.json."""
+    from repro.core.dragonfly import Dragonfly
+    from repro.core.fattree import ThreeTierFatTree
+    from repro.core.netsim import make_router
+    from repro.cosim import job_from_model, simulate_step
+    from repro.models.registry import get_config
+
+    record = {"schema_version": 1, "bench": "cosim", "shape": "train_4k",
+              "n_ranks": 64, "device_tflops": 989.0, "cells": []}
+    meshes = {"kimi-k2-1t-a32b": dict(dp=4, tp=16, ep=4),
+              "mixtral-8x22b": dict(dp=8, tp=8, ep=8)}
+    jobs = {arch: job_from_model(get_config(arch), **mesh)
+            for arch, mesh in meshes.items()}
+    topos = [
+        (MPHX(n=2, p=8, dims=(8, 8)), ("array", "graph")),
+        (ThreeTierFatTree(radix=8, nics=128,
+                          name="3-layer Fat-Tree (small)"), ("graph",)),
+        (Dragonfly(p=2, a=4, h=2, groups=9,
+                   name="Dragonfly (small)"), ("graph",)),
+    ]
+    for topo, engines in topos:
+        for engine in engines:
+            router = make_router(topo, engine=engine)
+            for arch, job in jobs.items():
+                res, us = timed(lambda j=job, r=router, e=engine:
+                                simulate_step(topo, j, engine=e, router=r))
+                record["cells"].append(
+                    {"mesh": meshes[arch], "engine": engine,
+                     "sim_wall_s": us / 1e6, **res.row()})
+                emit(f"cosim/{arch}/{topo.name.replace(' ', '_')}/{engine}",
+                     res.step_s * 1e6,
+                     f"tokens_per_s={res.tokens_per_s:.0f};"
+                     f"comm_ms={res.comm_s * 1e3:.1f};"
+                     f"x_analytic={res.comm_s / res.analytic_comm_s:.3f}")
+    # cross-engine pin: both engines must measure the same MPHX step
+    by = {}
+    for c in record["cells"]:
+        if "HyperX" in c["topology"] or "MPHX" in c["topology"]:
+            by.setdefault(c["arch"], {})[c["engine"]] = c["step_ms"]
+    agree = all(abs(v["array"] - v["graph"]) <= 1e-6 * v["array"]
+                for v in by.values() if len(v) == 2)
+    record["mphx_engines_agree_1e-6"] = agree
+    out = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "BENCH_cosim.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    emit("cosim/bench_artifact", 0.0,
+         f"wrote={os.path.relpath(path, os.path.join(out, '..'))};"
+         f"engines_agree={'yes' if agree else 'NO'}")
+
+
 # --------------------------------------------------- experiment suites ----
 
 
@@ -525,6 +585,7 @@ BENCHES = {
     "vectorized": bench_vectorized,
     "graph": bench_graph_routing,
     "sim": bench_flow_sim,
+    "cosim": bench_cosim,
     "experiments": bench_experiments,
     "diameter": bench_diameter,
     "flattening": bench_flattening,

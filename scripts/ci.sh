@@ -14,7 +14,14 @@ if [[ "${SKIP_INSTALL:-0}" != "1" ]]; then
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m pytest -x -q "$@"
+# fast lane skips @pytest.mark.slow (suite-artifact tests); the nightly
+# lane runs everything: PYTEST_MARKERS="" ./scripts/ci.sh
+PYTEST_MARKERS="${PYTEST_MARKERS-not slow}"
+if [[ -n "$PYTEST_MARKERS" ]]; then
+    python -m pytest -x -q -m "$PYTEST_MARKERS" "$@"
+else
+    python -m pytest -x -q "$@"
+fi
 
 if [[ "${SKIP_DOCS_SMOKE:-0}" != "1" ]]; then
     # docs can't rot: run the bash blocks of docs/routing.md +
@@ -35,4 +42,15 @@ if [[ "${SKIP_SIM_SMOKE:-0}" != "1" ]]; then
         --topos mphx-2p-8x8 dragonfly-small --failures link:0.05 \
         --out "$SIM_SMOKE_OUT"
     rm -rf "$SIM_SMOKE_OUT"
+fi
+
+if [[ "${SKIP_COSIM_SMOKE:-0}" != "1" ]]; then
+    # training-step co-sim smoke: one model config on a tiny fabric,
+    # both routing engines + the mapped placement (MPHX cells run all
+    # three variants), throwaway --out
+    COSIM_SMOKE_OUT="$(mktemp -d)"
+    python -m repro.experiments.run --suite cosim \
+        --config mixtral_8x22b --ranks 16 --topos mphx-2p-8x8 \
+        --out "$COSIM_SMOKE_OUT"
+    rm -rf "$COSIM_SMOKE_OUT"
 fi

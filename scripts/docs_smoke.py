@@ -23,6 +23,7 @@ DEFAULT_DOCS = [
     os.path.join("docs", "routing.md"),
     os.path.join("docs", "experiments.md"),
     os.path.join("docs", "simulation.md"),
+    os.path.join("docs", "cosim.md"),
 ]
 
 

@@ -1,0 +1,29 @@
+"""repro.cosim — training-step co-simulation on the fabric simulator.
+
+Derives real collective traffic (DP/TP/EP all-reduce, all-gather, MoE
+all-to-all) from a model config's sharding (:mod:`.traffic` — or from a
+partitioned HLO dump via :func:`~.traffic.phases_from_collectives`),
+maps participants onto NICs and switches (:mod:`.placement`), and
+executes the step's collective schedule on :mod:`repro.sim` as sprayed,
+plane-split flow batches with staggered start times (:mod:`.stepsim`) —
+yielding *measured* step time and tokens/sec per topology.
+``docs/cosim.md`` is the guide; ``tests/test_cosim.py`` pins the
+uncontended collapse to the :mod:`repro.core.netsim` closed forms.
+"""
+
+from .placement import (RING_STEPS, MappedLayout, group_members,
+                        mphx_rank_layout, phase_step_flows, rank_to_switch)
+from .stepsim import (PHASE_METHODS, PhaseTime, StepResult,
+                      analytic_phase_time, simulate_step)
+from .traffic import (PHASE_KINDS, CollectivePhase, TrainJob,
+                      decompose_phase, job_from_model,
+                      phases_from_collectives)
+
+__all__ = [
+    "RING_STEPS", "MappedLayout", "group_members", "mphx_rank_layout",
+    "phase_step_flows", "rank_to_switch",
+    "PHASE_METHODS", "PhaseTime", "StepResult", "analytic_phase_time",
+    "simulate_step",
+    "PHASE_KINDS", "CollectivePhase", "TrainJob", "decompose_phase",
+    "job_from_model", "phases_from_collectives",
+]

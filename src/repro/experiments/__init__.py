@@ -12,12 +12,17 @@ whole traffic matrices in one shot:
 * :mod:`~repro.experiments.simsuite`  — flow-simulator suites: measured
   FCTs (``sim``) and degraded fabrics (``failures``), on
   :mod:`repro.sim`;
+* :mod:`~repro.experiments.cosuite`   — training-step co-simulation
+  (``cosim``): measured step time and tokens/sec per fabric, on
+  :mod:`repro.cosim`;
 * :mod:`~repro.experiments.artifacts` — JSON + markdown artifact writers
-  (schema v3);
+  (schema v4);
 * :mod:`~repro.experiments.run`       — the CLI
   (``python -m repro.experiments.run --suite table2``).
 """
 
+from .cosuite import (DEFAULT_COSIM_CONFIGS, DEFAULT_COSIM_TOPOS,
+                      default_mesh, run_cosim_suite)
 from .scenarios import SCENARIOS, Scenario, available_scenarios, get_scenario
 from .simsuite import (DEFAULT_FAILURE_SPECS, DEFAULT_SIM_SCENARIOS,
                        DEFAULT_SIM_TOPOS, run_failures_suite, run_sim_suite)
@@ -26,6 +31,8 @@ from .sweep import (DEFAULT_SWEEP_TOPOS, ROUTING_MODES, SWEEP_TOPOLOGIES,
 from .artifacts import markdown_table, write_json, write_markdown
 
 __all__ = [
+    "DEFAULT_COSIM_CONFIGS", "DEFAULT_COSIM_TOPOS", "default_mesh",
+    "run_cosim_suite",
     "SCENARIOS", "Scenario", "available_scenarios", "get_scenario",
     "DEFAULT_FAILURE_SPECS", "DEFAULT_SIM_SCENARIOS", "DEFAULT_SIM_TOPOS",
     "run_failures_suite", "run_sim_suite",

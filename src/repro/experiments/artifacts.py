@@ -1,11 +1,11 @@
 """JSON + markdown artifact writers for experiment suites.
 
-Artifact schema (``schema_version`` 3):
+Artifact schema (``schema_version`` 4):
 
 ```json
 {
-  "schema_version": 3,
-  "suite": "table2" | "sweep" | "sim" | "failures",
+  "schema_version": 4,
+  "suite": "table2" | "sweep" | "sim" | "failures" | "cosim",
   "generated_by": "repro.experiments",
   "params": { ... suite parameters ... },
   "rows": [ { ... flat record ... }, ... ]
@@ -18,6 +18,15 @@ table, for review in PRs).
 
 Schema history:
 
+* **v4** — new ``cosim`` suite from the training-step co-simulator
+  (``repro.cosim``): rows carry the (config, topology, engine,
+  placement) cell plus measured ``comm_ms`` / ``compute_ms`` /
+  ``step_ms`` / ``tokens_per_s``, the alpha-beta closed form for the
+  same phases (``analytic_comm_ms``, ``comm_over_analytic``),
+  ``comm_fraction``, the ``mesh`` split, and a nested ``phases`` list
+  (per-collective ``measured_us`` / ``analytic_us`` / ``start_us``).
+  Undersized fabrics produce explicit ``{"skipped": true, ...}``
+  records.  All existing suites' columns are unchanged.
 * **v3** — two new suites from the flow-level fabric simulator
   (``repro.sim``): ``sim`` rows carry measured FCT percentiles
   (``fct_p50_us`` / ``fct_p95_us`` / ``fct_p99_us``, ``slowdown_*``,
@@ -44,7 +53,7 @@ import json
 import os
 from typing import Sequence
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 
 def artifact_payload(suite: str, params: dict, rows: list[dict]) -> dict:

@@ -10,10 +10,12 @@ Examples::
         --topos mphx-2p-8x8 --scenarios uniform --loads 0.5 0.9
     PYTHONPATH=src python -m repro.experiments.run --suite failures \
         --topos mphx-2p-8x8 dragonfly-small --failures link:0.01 plane:1
+    PYTHONPATH=src python -m repro.experiments.run --suite cosim \
+        --config kimi_k2_1t_a32b --ranks 64
     PYTHONPATH=src python -m repro.experiments.run --suite all
 
 Artifacts land in ``--out`` (default ``results/experiments``):
-``{table2,sweep,sim,failures}.{json,md}``; the JSON schema (v3) is
+``{table2,sweep,sim,failures,cosim}.{json,md}``; the JSON schema (v4) is
 documented in :mod:`repro.experiments.artifacts` and
 ``docs/experiments.md`` / ``docs/simulation.md``.
 """
@@ -24,13 +26,15 @@ import argparse
 import sys
 
 from repro.sim.failures import parse_failure_spec
+from .cosuite import (DEFAULT_COSIM_CONFIGS, DEFAULT_COSIM_RANKS,
+                      DEFAULT_COSIM_TOPOS, run_cosim_suite)
 from .scenarios import SCENARIOS
 from .simsuite import (DEFAULT_FAILURE_SPECS, run_failures_suite,
                        run_sim_suite)
 from .sweep import (DEFAULT_OUTDIR, DEFAULT_SWEEP_TOPOS, SWEEP_TOPOLOGIES,
                     run_sweep_suite, run_table2_suite)
 
-SUITES = ["table2", "sweep", "sim", "failures", "all"]
+SUITES = ["table2", "sweep", "sim", "failures", "cosim", "all"]
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -86,6 +90,20 @@ def build_parser() -> argparse.ArgumentParser:
                    choices=["minimal", "valiant", "adaptive"],
                    default="adaptive",
                    help="routing mode for degraded-fabric re-routing")
+    p.add_argument("--config", nargs="+", default=None, metavar="ARCH",
+                   help="cosim suite: model configs to co-simulate "
+                   "(underscores normalize to the registry's hyphenated "
+                   f"arch ids; default: {' '.join(DEFAULT_COSIM_CONFIGS)})")
+    p.add_argument("--ranks", type=int, default=DEFAULT_COSIM_RANKS,
+                   help="cosim suite: training job size in ranks "
+                   f"(default {DEFAULT_COSIM_RANKS})")
+    p.add_argument("--device-tflops", type=float, default=989.0,
+                   help="cosim suite: per-device peak for the overlapped "
+                   "compute term (default 989, H100 bf16 dense)")
+    p.add_argument("--cosim-method", choices=["steady", "batches"],
+                   default="steady",
+                   help="cosim phase execution: steady-state step scaling "
+                   "or the fully serialized batch schedule")
     return p
 
 
@@ -135,6 +153,18 @@ def main(argv: "list[str] | None" = None) -> int:
             print("sim: FAIL — simulator steady-state loads diverge from "
                   "the analytic engine (>1e-6)", file=sys.stderr)
             rc = 1
+    if args.suite in ("cosim", "all"):
+        # the sim suites interpret --topos as sweep topologies; the cosim
+        # default trims to fabrics big enough for the default job
+        cosim_topos = args.topos if args.topos else list(DEFAULT_COSIM_TOPOS)
+        payload = run_cosim_suite(
+            args.out, config_names=args.config, topo_names=cosim_topos,
+            n_ranks=args.ranks, device_tflops=args.device_tflops,
+            method=args.cosim_method,
+            backend=args.backend if args.backend != "auto" else "numpy")
+        print(f"cosim: {payload['params']['n_rows']} cells, "
+              f"{payload['params']['n_skipped']} skipped -> "
+              f"{args.out}/cosim.json, {args.out}/cosim.md")
     if args.suite in ("failures", "all"):
         payload = run_failures_suite(
             args.out, topo_names=args.topos,

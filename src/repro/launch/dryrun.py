@@ -50,84 +50,13 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 
 # --------------------------------------------------------------------------
-# HLO collective parsing
+# HLO collective parsing — lives in repro.launch.hloparse (shared with the
+# co-sim traffic layer); re-exported here for back-compat.
 # --------------------------------------------------------------------------
 
-DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-               "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-               "f64": 8, "c64": 8, "c128": 16}
-
-COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                  "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * DTYPE_BYTES[dt]
-    return total
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_RE.search(line)
-    if m:
-        return int(m.group(2))
-    m = _GROUPS_LIST_RE.search(line)
-    if m:
-        return len([x for x in m.group(1).split(",") if x.strip() != ""])
-    return 1
-
-
-def parse_collectives(hlo: str) -> dict:
-    """Per-device wire bytes by collective kind, from partitioned HLO.
-
-    Shapes in partitioned HLO are per-device.  Wire-byte accounting per
-    device: AR: 2(g-1)/g * payload; AG: (g-1)/g * output; RS: (g-1)/g *
-    input(=output*g); A2A: (g-1)/g * payload; permute: payload."""
-    out = {k: {"count": 0, "payload_bytes": 0.0, "wire_bytes": 0.0,
-               "by_group": {}} for k in COLLECTIVE_OPS}
-    for line in hlo.splitlines():
-        line = line.strip()
-        m = re.match(r"%?[\w\.\-]+ = (.*?) (all-reduce|all-gather|"
-                     r"reduce-scatter|all-to-all|collective-permute)"
-                     r"(-start|-done)?\(", line)
-        if not m:
-            continue
-        if m.group(3) == "-done":
-            continue  # counted at -start
-        typ, op = m.group(1), m.group(2)
-        payload = _shape_bytes(typ)
-        g = _group_size(line)
-        if op == "all-reduce":
-            wire = 2 * (g - 1) / max(g, 1) * payload
-        elif op == "all-gather":
-            wire = (g - 1) / max(g, 1) * payload          # payload = output
-        elif op == "reduce-scatter":
-            wire = (g - 1) * payload                       # payload = output
-        elif op == "all-to-all":
-            wire = (g - 1) / max(g, 1) * payload
-        else:
-            wire = payload
-        rec = out[op]
-        rec["count"] += 1
-        rec["payload_bytes"] += payload
-        rec["wire_bytes"] += wire
-        key = str(g)
-        rec["by_group"][key] = rec["by_group"].get(key, 0.0) + wire
-    out["total_wire_bytes"] = sum(out[k]["wire_bytes"]
-                                  for k in COLLECTIVE_OPS)
-    out["total_count"] = sum(out[k]["count"] for k in COLLECTIVE_OPS)
-    return out
+from repro.launch.hloparse import (COLLECTIVE_OPS, DTYPE_BYTES,  # noqa: E402,F401
+                                   _group_size, _shape_bytes,
+                                   parse_collectives)
 
 
 # --------------------------------------------------------------------------

@@ -35,8 +35,68 @@ _INSTR_RE = re.compile(
     r"([\w\-]+)\((.*)$")
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*(?:\([^)]*\))?\s*"
                           r"(?:->\s*[^{]*)?\{\s*$")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_NUM_PARTITIONS_RE = re.compile(r"num_partitions=(\d+)")
+_REPLICA_COUNT_RE = re.compile(r"replica_count=(\d+)")
+
+
+def parse_replica_groups(line: str, default_size: int = 1) -> "list[int]":
+    """Group sizes of a collective instruction line.
+
+    Handles every format XLA emits:
+
+    * ``replica_groups={{0,2},{1,3}}`` — explicit nested lists (the outer
+      braces close *after* the last group, so a single-group regex like
+      ``\\{\\{([^}]*)\\}`` captures only the first group — the historical
+      ``_group_size`` bug this function replaces);
+    * ``replica_groups=[2,4]<=[8]`` — iota v2 format, 2 groups of 4;
+    * ``replica_groups={}`` — one group of *all* participants, whose size
+      is the module's partition count (``default_size``), not 1.
+    """
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return [int(m.group(2))] * int(m.group(1))
+    idx = line.find("replica_groups={")
+    if idx < 0:
+        return [default_size]
+    i = idx + len("replica_groups=")
+    depth = 0
+    j = i
+    for j in range(i, len(line)):
+        if line[j] == "{":
+            depth += 1
+        elif line[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    inner = line[i + 1:j]
+    groups = re.findall(r"\{([^{}]*)\}", inner)
+    if not groups and inner.strip():     # flat single-group form {0,1,2}
+        groups = [inner]
+    if not groups or all(not g.strip() for g in groups):
+        return [default_size]            # "{}": every participant, one group
+    return [len([x for x in g.split(",") if x.strip() != ""])
+            for g in groups]
+
+
+def _group_size(line: str, default_size: int = 1) -> int:
+    """Size of (the first of) a collective's replica groups."""
+    return parse_replica_groups(line, default_size)[0]
+
+
+def module_device_count(hlo: str) -> int:
+    """Participant count from the ``HloModule`` header line:
+    ``num_partitions x replica_count`` (each defaults to 1)."""
+    head = hlo[:hlo.find("\n")] if "\n" in hlo else hlo
+    if "HloModule" not in head:          # header not first: scan for it
+        for ln in hlo.splitlines():
+            if ln.lstrip().startswith("HloModule"):
+                head = ln
+                break
+    mp = _NUM_PARTITIONS_RE.search(head)
+    mr = _REPLICA_COUNT_RE.search(head)
+    return ((int(mp.group(1)) if mp else 1)
+            * (int(mr.group(1)) if mr else 1))
 
 
 def _shape_dims(type_str: str):
@@ -82,6 +142,7 @@ class HloModule:
         self.computations: dict[str, Computation] = {}
         self.fusion_called: set[str] = set()
         self.entry: str | None = None
+        self.device_count: int = module_device_count(text)
         self._parse(text)
 
     @staticmethod
@@ -442,13 +503,7 @@ class HloModule:
                                                   "collective-permute"):
                 # started ops' type includes (operand, result) tuples; halve
                 payload = payload / 2.0
-            mg = _GROUPS_RE.search(i.line)
-            if mg:
-                g = int(mg.group(2))
-            else:
-                mg = _GROUPS_LIST_RE.search(i.line)
-                g = len([x for x in mg.group(1).split(",") if x.strip()]) \
-                    if mg else 1
+            g = _group_size(i.line, self.device_count)
             if op == "all-reduce":
                 wire = 2 * (g - 1) / max(g, 1) * payload
             elif op == "all-gather":
@@ -510,3 +565,52 @@ def analyze(hlo_text: str) -> dict:
         "collectives": mod.total_collectives(),
         "n_computations": len(mod.computations),
     }
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-device wire bytes by collective kind, from partitioned HLO.
+
+    Line-by-line accounting (no while-trip expansion — see
+    :meth:`HloModule.total_collectives` for the scan-aware totals; this is
+    the flat single-pass parser the dry-run and co-sim layers consume).
+    Shapes in partitioned HLO are per-device.  Wire-byte accounting per
+    device: AR: 2(g-1)/g * payload; AG: (g-1)/g * output; RS: (g-1) *
+    output; A2A: (g-1)/g * payload; permute: payload.  Group sizes come
+    from :func:`parse_replica_groups` (nested-brace, iota, and empty
+    ``replica_groups={}`` formats all handled; empty = every participant,
+    using the module header's ``num_partitions x replica_count``)."""
+    default_g = module_device_count(hlo)
+    out = {k: {"count": 0, "payload_bytes": 0.0, "wire_bytes": 0.0,
+               "by_group": {}} for k in COLLECTIVE_OPS}
+    for line in hlo.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w\.\-]+ = (.*?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start|-done)?\(", line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # counted at -start
+        typ, op = m.group(1), m.group(2)
+        payload = _shape_bytes(typ)
+        g = _group_size(line, default_g)
+        if op == "all-reduce":
+            wire = 2 * (g - 1) / max(g, 1) * payload
+        elif op == "all-gather":
+            wire = (g - 1) / max(g, 1) * payload          # payload = output
+        elif op == "reduce-scatter":
+            wire = (g - 1) * payload                       # payload = output
+        elif op == "all-to-all":
+            wire = (g - 1) / max(g, 1) * payload
+        else:
+            wire = payload
+        rec = out[op]
+        rec["count"] += 1
+        rec["payload_bytes"] += payload
+        rec["wire_bytes"] += wire
+        key = str(g)
+        rec["by_group"][key] = rec["by_group"].get(key, 0.0) + wire
+    out["total_wire_bytes"] = sum(out[k]["wire_bytes"]
+                                  for k in COLLECTIVE_OPS)
+    out["total_count"] = sum(out[k]["count"] for k in COLLECTIVE_OPS)
+    return out

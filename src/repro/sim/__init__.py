@@ -9,8 +9,9 @@ re-routing (:mod:`.failures`), and measured collective schedules
 """
 
 from .collective_sim import SIM_COLLECTIVES, simulate_collective
-from .events import (FlowSimResult, FlowSpec, flows_to_demands,
-                     path_latency, simulate_demands, simulate_flows,
+from .events import (BatchSimResult, FlowSimResult, FlowSpec,
+                     flows_to_demands, path_latency, simulate_demands,
+                     simulate_flow_batches, simulate_flows,
                      simulate_incidence)
 from .failures import (DegradedGraph, FailureSpec, degrade_graph,
                        degraded_router, failure_throughput,
@@ -21,8 +22,9 @@ from .spray import SprayedSimResult, simulate_sprayed
 
 __all__ = [
     "SIM_COLLECTIVES", "simulate_collective",
-    "FlowSimResult", "FlowSpec", "flows_to_demands", "path_latency",
-    "simulate_demands", "simulate_flows", "simulate_incidence",
+    "BatchSimResult", "FlowSimResult", "FlowSpec", "flows_to_demands",
+    "path_latency", "simulate_demands", "simulate_flow_batches",
+    "simulate_flows", "simulate_incidence",
     "DegradedGraph", "FailureSpec", "degrade_graph", "degraded_router",
     "failure_throughput", "parse_failure_spec", "plane_capacity_factor",
     "recovery_curve",

@@ -204,7 +204,8 @@ def simulate_flows(router, flows: "list[FlowSpec]", mode: str = "minimal",
 def simulate_demands(router, demands: DemandArrays, flow_time_s: float,
                      mode: str = "minimal", net: NetParams = DEFAULT_NET,
                      backend: str = "numpy",
-                     inc: "FlowIncidence | None" = None) -> dict:
+                     inc: "FlowIncidence | None" = None,
+                     start_s=None) -> dict:
     """Measured-FCT summary of one traffic matrix at its offered rates.
 
     Each demand row becomes one flow sized so that at its offered Gbps it
@@ -216,12 +217,16 @@ def simulate_demands(router, demands: DemandArrays, flow_time_s: float,
     caller sweeping load levels of one scenario can extract ``inc`` once
     and pass it in — it must come from a demand matrix with the same
     (src, dst) rows.
+
+    ``start_s`` (scalar or (F,)) staggers per-flow arrival offsets — e.g.
+    dependent collective phases of a co-simulated training step arriving
+    as the previous phase drains (:mod:`repro.cosim`).
     """
     gbps = np.asarray(demands.gbps, dtype=np.float64)
     if inc is None:
         inc = flow_incidence(router, demands, mode)
     res = simulate_incidence(inc, gbps_to_Bps(gbps) * flow_time_s, gbps,
-                             net=net, backend=backend)
+                             start_s=start_s, net=net, backend=backend)
     pct = res.fct_percentiles()
     slow = res.slowdown(gbps)
     ok = ~res.stalled
@@ -243,3 +248,71 @@ def simulate_demands(router, demands: DemandArrays, flow_time_s: float,
         "slowdown_p99": round(float(np.percentile(slow[ok], 99)), 4)
             if ok.any() else None,
     }
+
+
+@dataclass
+class BatchSimResult:
+    """Outcome of a serialized sequence of flow batches.
+
+    ``batch_start_s[k]`` / ``batch_finish_s[k]`` bound batch ``k`` on the
+    shared fabric clock; ``makespan_s`` is the finish of the last batch.
+    ``results[k]`` is the per-batch :class:`FlowSimResult` (its times are
+    on the same shared clock).
+    """
+
+    batch_start_s: np.ndarray    # (K,)
+    batch_finish_s: np.ndarray   # (K,)
+    makespan_s: float
+    results: "list[FlowSimResult]"
+
+    def batch_span_s(self) -> np.ndarray:
+        return self.batch_finish_s - self.batch_start_s
+
+
+def simulate_flow_batches(router, batches: "list[list[FlowSpec]]",
+                          mode: str = "minimal",
+                          rate_cap_gbps: "float | np.ndarray | None" = None,
+                          gap_s: float = 0.0,
+                          net: NetParams = DEFAULT_NET,
+                          backend: str = "numpy") -> BatchSimResult:
+    """Run dependent flow batches back-to-back on one plane's fabric.
+
+    Batch ``k`` is admitted at the transfer-finish time of batch ``k-1``
+    plus ``gap_s`` (e.g. a per-phase software alpha) — the dependency
+    structure of a collective schedule, where one phase's flows cannot
+    start until the previous phase has drained.  Within a batch, each
+    flow's ``start_s`` is relative to the batch admission time, so
+    staggered starts inside a phase still work.  Because batches never
+    overlap on the fabric, simulating them independently and accumulating
+    the clock is exact.
+    """
+    if rate_cap_gbps is None:
+        rate_cap_gbps = router.topo.port_gbps if hasattr(router, "topo") \
+            else router.graph.link_gbps
+    t = 0.0
+    starts, finishes, results = [], [], []
+    for flows in batches:
+        starts.append(t)
+        if not flows:
+            finishes.append(t)
+            results.append(None)
+            continue
+        dem = flows_to_demands(flows)
+        inc = flow_incidence(router, dem, mode)
+        res = simulate_incidence(
+            inc, np.array([f.size_bytes for f in flows]),
+            rate_cap_gbps,
+            t + np.array([f.start_s for f in flows]),
+            net=net, backend=backend)
+        done = np.isfinite(res.finish_s)
+        if not done.all():
+            raise RuntimeError("stalled flows in batch: fabric has a "
+                               "zero-capacity cut for this phase")
+        t = float(res.finish_s.max()) + gap_s
+        finishes.append(float(res.finish_s.max()))
+        results.append(res)
+    return BatchSimResult(
+        batch_start_s=np.asarray(starts),
+        batch_finish_s=np.asarray(finishes),
+        makespan_s=finishes[-1] if finishes else 0.0,
+        results=results)

@@ -8,6 +8,7 @@ import sys
 import pytest
 
 
+@pytest.mark.slow
 def test_multidevice_checks_subprocess():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

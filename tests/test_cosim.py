@@ -1,0 +1,391 @@
+"""Differential tests for the training-step co-simulator (repro.cosim).
+
+The load-bearing pins: in the uncontended single-collective limit (zero
+per-hop latencies, even plane spray, no chunk overhead) the *measured*
+co-sim phase time must collapse to the alpha-beta closed forms of
+``repro.core.netsim`` within 1e-6 relative — for both phase execution
+methods.  Around that: contention monotonicity (model size, plane
+skew/failure), routing-engine and numpy/jax backend agreement, the
+serialized batch scheduler, hierarchical phase decomposition, placement
+properties, and the ``cosim`` experiment-suite artifact.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.hyperx import MPHX
+from repro.core.netsim import (DEFAULT_NET, NetParams, _alpha,
+                               allgather_time, make_router,
+                               ring_allreduce_time)
+from repro.core.planes import SprayConfig
+from repro.cosim import (CollectivePhase, TrainJob, decompose_phase,
+                         group_members, job_from_model, mphx_rank_layout,
+                         phase_step_flows, phases_from_collectives,
+                         rank_to_switch, simulate_step)
+from repro.sim import FlowSpec, simulate_flow_batches
+
+# ------------------------------------------------ uncontended collapse ----
+# Zero per-hop latencies kill the hop-count asymmetry between paths, a
+# chunk-aligned payload sprays evenly, and full-mesh ring flows are
+# link-disjoint — so the measured time must equal the closed form.
+
+UNCONTENDED_NET = NetParams(t_switch=0.0, t_prop_per_hop=0.0)
+UNCONTENDED_CFG = SprayConfig(n_planes=2, chunk_bytes=1 << 17,
+                              per_chunk_overhead_s=0.0)
+
+
+def _uncontended_topo() -> MPHX:
+    return MPHX(n=2, p=1, dims=(8,))
+
+
+def _single_phase_job(phase: CollectivePhase, n_ranks: int) -> TrainJob:
+    # active_params=0 -> compute_s == 0 -> step time IS the comm time
+    return TrainJob("toy", n_ranks, {"dp": n_ranks, "tp": 1, "ep": 1},
+                    tokens_per_step=1, active_params=0, phases=(phase,))
+
+
+@pytest.mark.parametrize("method", ["steady", "batches"])
+def test_uncontended_allreduce_collapses_to_closed_form(method):
+    topo = _uncontended_topo()
+    m = 8
+    b = m * 2 * (1 << 17) * 4   # step chunk = b/m = whole chunks per plane
+    job = _single_phase_job(
+        CollectivePhase("ar", "allreduce", m, 1, b), m)
+    res = simulate_step(topo, job, cfg=UNCONTENDED_CFG,
+                        net=UNCONTENDED_NET, method=method)
+    closed = ring_allreduce_time(topo, b, m=m, net=UNCONTENDED_NET).total_s
+    assert abs(res.comm_s - closed) / closed < 1e-6
+    assert res.step_s == res.comm_s
+
+
+@pytest.mark.parametrize("method", ["steady", "batches"])
+def test_uncontended_allgather_collapses_to_closed_form(method):
+    topo = _uncontended_topo()
+    m = 8
+    b = 2 * (1 << 17) * 4       # shard = whole chunks per plane
+    job = _single_phase_job(
+        CollectivePhase("ag", "allgather", m, 1, b), m)
+    res = simulate_step(topo, job, cfg=UNCONTENDED_CFG,
+                        net=UNCONTENDED_NET, method=method)
+    closed = allgather_time(topo, b, m=m, net=UNCONTENDED_NET).total_s
+    assert abs(res.comm_s - closed) / closed < 1e-6
+
+
+def test_uncontended_steady_and_batches_agree():
+    topo = _uncontended_topo()
+    b = 8 * 2 * (1 << 17) * 4
+    job = _single_phase_job(CollectivePhase("ar", "allreduce", 8, 1, b), 8)
+    out = [simulate_step(topo, job, cfg=UNCONTENDED_CFG,
+                         net=UNCONTENDED_NET, method=m).comm_s
+           for m in ("steady", "batches")]
+    assert abs(out[0] - out[1]) / out[0] < 1e-6
+
+
+# --------------------------------------------------------- monotonicity ----
+
+
+def _toy_job(scale: float = 1.0, n_ranks: int = 32) -> TrainJob:
+    phases = (
+        CollectivePhase("tp_ag", "allgather", 4, 1, scale * (1 << 22),
+                        calls=4),
+        CollectivePhase("ep_a2a", "alltoall", 4, 4, scale * (1 << 22),
+                        calls=2),
+        CollectivePhase("dp_ar", "allreduce", n_ranks // 4, 4,
+                        scale * (1 << 26)),
+    )
+    return TrainJob("toy", n_ranks, {"dp": n_ranks // 4, "tp": 4, "ep": 4},
+                    tokens_per_step=4096, active_params=int(1e9),
+                    phases=phases)
+
+
+def test_step_time_monotone_in_model_size():
+    topo = MPHX(n=2, p=4, dims=(8,))
+    comms = [simulate_step(topo, _toy_job(s)).comm_s for s in (1, 2, 4)]
+    assert comms[0] < comms[1] < comms[2]
+    # doubling every payload at fixed alpha at most doubles the time
+    assert comms[1] <= 2 * comms[0] + 1e-12
+
+
+def test_step_time_monotone_in_plane_failure():
+    topo = MPHX(n=2, p=4, dims=(8,))
+    job = _toy_job()
+    comms = [simulate_step(topo, job, plane_skew=skew).comm_s
+             for skew in ([1.0, 1.0], [1.0, 2.0], [1.0, math.inf])]
+    assert comms[0] <= comms[1] <= comms[2]
+    assert comms[0] < comms[2]
+
+
+def test_routing_engines_agree_on_mphx():
+    topo = MPHX(n=2, p=4, dims=(8,))
+    job = _toy_job()
+    by_engine = {e: simulate_step(topo, job, engine=e).comm_s
+                 for e in ("array", "graph")}
+    rel = abs(by_engine["array"] - by_engine["graph"]) / by_engine["array"]
+    assert rel < 1e-9
+
+
+def test_numpy_and_jax_backends_agree():
+    pytest.importorskip("jax")
+    topo = MPHX(n=2, p=4, dims=(8,))
+    job = _toy_job()
+    a = simulate_step(topo, job, backend="numpy").comm_s
+    b = simulate_step(topo, job, backend="jax").comm_s
+    assert abs(a - b) / a < 1e-6
+
+
+def test_intra_switch_phase_costs_alpha_only():
+    topo = MPHX(n=2, p=8, dims=(8,))
+    job = _single_phase_job(
+        CollectivePhase("tp", "allgather", 8, 1, 1 << 20, calls=3), 16)
+    res = simulate_step(topo, job)
+    ph = res.phases[0]
+    assert ph.n_flows == 0    # every group fits inside one switch
+    assert res.comm_s == pytest.approx(
+        3 * 7 * _alpha(topo, 2.0, DEFAULT_NET))
+
+
+def test_compute_term_follows_6nd():
+    topo = _uncontended_topo()
+    b = 8 * 2 * (1 << 17) * 4
+    job = TrainJob("toy", 8, {"dp": 8, "tp": 1, "ep": 1},
+                   tokens_per_step=4096, active_params=int(1e9),
+                   phases=(CollectivePhase("ar", "allreduce", 8, 1, b),))
+    res = simulate_step(topo, job, device_tflops=100.0)
+    expect = 6.0 * 1e9 * 4096 / (8 * 100.0 * 1e12)
+    assert res.compute_s == pytest.approx(expect)
+    assert res.step_s == pytest.approx(res.comm_s + res.compute_s)
+    assert res.tokens_per_s == pytest.approx(4096 / res.step_s)
+
+
+def test_oversized_job_rejected():
+    topo = MPHX(n=2, p=1, dims=(4,))   # 4 NICs
+    with pytest.raises(ValueError, match="ranks"):
+        simulate_step(topo, _toy_job(n_ranks=32))
+
+
+# ------------------------------------------------- serialized batches ----
+
+
+def test_flow_batches_serialize_on_the_fabric_clock():
+    topo = MPHX(n=2, p=2, dims=(4,))
+    router = make_router(topo)
+    batch = [FlowSpec(0, 1, 1 << 24), FlowSpec(2, 3, 1 << 24)]
+    res = simulate_flow_batches(router, [batch, batch, batch])
+    assert np.all(np.diff(res.batch_start_s) > 0)
+    assert np.all(res.batch_finish_s >= res.batch_start_s)
+    # batch k is admitted exactly at batch k-1's transfer finish (gap 0)
+    assert res.batch_start_s[1] == pytest.approx(res.batch_finish_s[0])
+    assert res.makespan_s == pytest.approx(float(res.batch_finish_s[-1]))
+    # identical batches on an idle fabric take identical spans
+    spans = res.batch_span_s()
+    assert spans[1] == pytest.approx(spans[0])
+
+
+def test_flow_batches_gap_shifts_later_batches():
+    topo = MPHX(n=2, p=2, dims=(4,))
+    router = make_router(topo)
+    batch = [FlowSpec(0, 1, 1 << 24)]
+    r0 = simulate_flow_batches(router, [batch, batch], gap_s=0.0)
+    r1 = simulate_flow_batches(router, [batch, batch], gap_s=1e-3)
+    assert r1.makespan_s == pytest.approx(r0.makespan_s + 1e-3)
+
+
+def test_flow_batches_empty_batch_costs_nothing():
+    topo = MPHX(n=2, p=2, dims=(4,))
+    router = make_router(topo)
+    batch = [FlowSpec(0, 1, 1 << 24)]
+    res = simulate_flow_batches(router, [batch, [], batch])
+    assert res.results[1] is None
+    assert res.batch_start_s[1] == pytest.approx(res.batch_finish_s[1])
+    full = simulate_flow_batches(router, [batch, batch])
+    assert res.makespan_s == pytest.approx(full.makespan_s)
+
+
+def test_flow_batches_within_batch_start_offsets():
+    topo = MPHX(n=2, p=2, dims=(4,))
+    router = make_router(topo)
+    off = 5e-4
+    plain = simulate_flow_batches(router, [[FlowSpec(0, 1, 1 << 24)]])
+    late = simulate_flow_batches(
+        router, [[FlowSpec(0, 1, 1 << 24, start_s=off)]])
+    assert late.makespan_s == pytest.approx(plain.makespan_s + off)
+
+
+# --------------------------------------------- traffic & decomposition ----
+
+
+def test_wire_bytes_per_rank_formulas():
+    ar = CollectivePhase("a", "allreduce", 8, 1, 800.0)
+    ag = CollectivePhase("b", "allgather", 8, 1, 100.0)
+    a2a = CollectivePhase("c", "alltoall", 8, 1, 700.0)
+    assert ar.wire_bytes_per_rank() == pytest.approx(2 * 7 / 8 * 800.0)
+    assert ag.wire_bytes_per_rank() == pytest.approx(7 * 100.0)
+    assert a2a.wire_bytes_per_rank() == pytest.approx(700.0)
+
+
+@pytest.mark.parametrize("kind", ["allreduce", "allgather",
+                                  "reducescatter"])
+def test_decompose_phase_conserves_wire_bytes(kind):
+    phase = CollectivePhase("x", kind, 16, 1, float(1 << 20), calls=3)
+    subs = decompose_phase(phase, [(4, 1), (4, 4)])
+    assert len(subs) == (4 if kind == "allreduce" else 2)
+    total = sum(s.wire_bytes_per_rank() for s in subs)
+    assert total == pytest.approx(phase.wire_bytes_per_rank())
+    assert all(s.calls == 3 for s in subs)
+
+
+def test_decompose_phase_passthrough_cases():
+    a2a = CollectivePhase("x", "alltoall", 16, 1, 1.0)
+    assert decompose_phase(a2a, [(4, 1), (4, 4)]) == [a2a]
+    ar = CollectivePhase("y", "allreduce", 16, 1, 1.0)
+    assert decompose_phase(ar, [(16, 1)]) == [ar]
+    with pytest.raises(ValueError, match="factor"):
+        decompose_phase(ar, [(4, 1), (2, 4)])
+
+
+def test_job_from_model_phase_accounting():
+    from repro.models.registry import get_config
+    cfg = get_config("mixtral-8x22b")
+    job = job_from_model(cfg, dp=8, tp=8, ep=8,
+                         param_count=int(141e9), active_params=int(39e9))
+    kinds = {p.name: p for p in job.phases}
+    assert set(kinds) == {"tp_act_allgather", "tp_act_reducescatter",
+                          "ep_token_alltoall", "dp_grad_allreduce"}
+    ag = kinds["tp_act_allgather"]
+    assert (ag.size, ag.stride, ag.calls) == (8, 1, 2 * cfg.n_layers)
+    a2a = kinds["ep_token_alltoall"]
+    assert (a2a.size, a2a.stride) == (8, 8)
+    ar = kinds["dp_grad_allreduce"]
+    # bf16 grads of the rank's 1/tp parameter shard
+    assert ar.bytes_per_rank == pytest.approx(141e9 * 2 / 8)
+    assert job.total_wire_bytes() > 0
+
+
+def test_job_from_model_validates_mesh():
+    from repro.models.registry import get_config
+    cfg = get_config("mixtral-8x22b")
+    with pytest.raises(ValueError, match="divide dp"):
+        job_from_model(cfg, dp=4, tp=2, ep=3, param_count=1, active_params=1)
+    with pytest.raises(ValueError, match="n_experts"):
+        job_from_model(cfg, dp=6, tp=2, ep=6, param_count=1, active_params=1)
+
+
+def test_phases_from_collectives_inverts_wire_accounting():
+    parsed = {
+        "all-reduce": {"count": 2, "by_group": {"8": 1400.0}},
+        "all-gather": {"count": 1, "by_group": {"4": 300.0}},
+        "all-to-all": {"count": 1, "by_group": {"4": 512.0}},
+        "collective-permute": {"count": 3, "by_group": {}},
+    }
+    phases = {p.kind: p for p in phases_from_collectives(parsed, 16)}
+    assert set(phases) == {"allreduce", "allgather", "alltoall"}
+    assert phases["allreduce"].bytes_per_rank == pytest.approx(
+        1400.0 * 8 / (2 * 7))
+    assert phases["allgather"].bytes_per_rank == pytest.approx(100.0)
+    assert phases["alltoall"].bytes_per_rank == pytest.approx(512.0)
+    # each recovered phase re-emits the parsed wire bytes
+    for p in phases.values():
+        assert p.wire_bytes_per_rank() == pytest.approx(
+            {"allreduce": 1400.0, "allgather": 300.0,
+             "alltoall": 512.0}[p.kind])
+    with pytest.raises(ValueError, match="divide"):
+        phases_from_collectives(
+            {"all-reduce": {"count": 1, "by_group": {"3": 9.0}}}, 16)
+
+
+# ------------------------------------------------------------ placement ----
+
+
+def test_group_members_partition_rank_space():
+    groups = group_members(24, 4, 2)
+    flat = sorted(r for g in groups for r in g)
+    assert flat == list(range(24))           # disjoint cover
+    assert all(len(g) == 4 for g in groups)
+    for g in groups:
+        assert all(b - a == 2 for a, b in zip(g, g[1:]))
+
+
+def test_phase_step_flows_conserve_crossing_bytes():
+    topo = MPHX(n=2, p=2, dims=(4,))
+    switch_of = rank_to_switch(topo)
+    phase = CollectivePhase("ar", "allreduce", 8, 1, 8 * 1024.0)
+    flows, steps, senders = phase_step_flows(phase, switch_of, 8)
+    assert steps == 2 * 7
+    # per ring step each rank sends b/m; same-switch hops stay off-fabric
+    crossing = sum(1 for k in range(8)
+                   if switch_of[k] != switch_of[(k + 1) % 8])
+    assert sum(f.size_bytes for f in flows) == pytest.approx(
+        crossing * 1024.0)
+    assert senders.sum() == crossing
+    assert len(senders) == len(flows)
+
+
+def test_mphx_rank_layout_is_a_nic_permutation():
+    topo = MPHX(n=2, p=2, dims=(4, 2))      # 16 NICs
+    from repro.models.registry import get_config
+    job = job_from_model(get_config("mixtral-8x22b"), dp=4, tp=4, ep=4,
+                         param_count=int(1e9), active_params=int(1e9))
+    layout = mphx_rank_layout(topo, job)
+    assert sorted(layout.nic.tolist()) == list(range(16))
+    for axis in ("tp", "ep", "dp"):
+        fs = [f for f, _ in layout.factors[axis]]
+        assert math.prod(fs) == job.mesh[axis]
+
+
+def test_mapped_placement_runs_and_reports_phases():
+    topo = MPHX(n=2, p=2, dims=(4, 2))
+    from repro.models.registry import get_config
+    job = job_from_model(get_config("mixtral-8x22b"), dp=4, tp=4, ep=4,
+                         param_count=int(1e9), active_params=int(1e9))
+    res = simulate_step(topo, job, placement="mapped")
+    assert res.comm_s > 0
+    # hierarchical decomposition may split phases, never drop traffic
+    assert len(res.phases) >= len(job.phases)
+    with pytest.raises(ValueError, match="MPHX"):
+        from repro.core.dragonfly import Dragonfly
+        simulate_step(Dragonfly(p=2, a=4, h=2, groups=9), job,
+                      placement="mapped")
+
+
+# ------------------------------------------------------ suite artifact ----
+
+
+@pytest.mark.slow
+def test_cosim_suite_writes_v4_artifacts(tmp_path):
+    import json
+
+    from repro.experiments import run_cosim_suite
+
+    payload = run_cosim_suite(str(tmp_path),
+                              config_names=["mixtral_8x22b"],
+                              topo_names=["mphx-2p-8x8"], n_ranks=16)
+    disk = json.load(open(tmp_path / "cosim.json"))
+    assert disk["schema_version"] == 4
+    assert disk["suite"] == "cosim"
+    rows = [r for r in disk["rows"] if not r.get("skipped")]
+    # MPHX runs both engines plus the mapped placement
+    assert {(r["engine"], r["placement"]) for r in rows} == {
+        ("array", "linear"), ("array", "mapped"), ("graph", "linear")}
+    for r in rows:
+        assert r["tokens_per_s"] > 0
+        assert r["step_ms"] >= r["comm_ms"]
+        assert r["phases"]
+    md = (tmp_path / "cosim.md").read_text()
+    assert "tokens_per_s" in md
+    assert payload["params"]["meshes"]["mixtral-8x22b"]["tp"] > 1
+
+
+@pytest.mark.slow
+def test_cosim_suite_skips_undersized_fabrics(tmp_path):
+    import json
+
+    from repro.experiments import run_cosim_suite
+
+    run_cosim_suite(str(tmp_path), config_names=["mixtral-8x22b"],
+                    topo_names=["dragonfly-small"], n_ranks=128)
+    disk = json.load(open(tmp_path / "cosim.json"))
+    assert disk["params"]["n_rows"] == 0
+    [row] = disk["rows"]
+    assert row["skipped"] and "NIC" in row["reason"]

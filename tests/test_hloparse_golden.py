@@ -1,0 +1,201 @@
+"""Golden-fixture regression tests for the HLO collective parser.
+
+The fixtures under ``tests/fixtures/hlo/`` are small post-partitioning
+HLO programs in XLA's text format (dense DP all-reduce, TP
+all-gather/reduce-scatter, MoE all-to-all, and the empty
+``replica_groups={}`` all-devices form).  Every byte count below is
+computed by hand from the fixture shapes — these tests pin the exact
+wire-byte accounting the dry-run and co-sim layers consume, plus the
+``_group_size`` fix (nested-brace group lists used to be cut off at the
+first ``}``, and empty group lists silently parsed as size 1).
+"""
+
+import os
+
+import pytest
+
+from repro.launch.hloparse import (HloModule, _group_size,
+                                   module_device_count,
+                                   parse_collectives, parse_replica_groups)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "hlo")
+
+
+def fixture(name: str) -> str:
+    with open(os.path.join(FIXTURES, name)) as f:
+        return f.read()
+
+
+# ---------------------------------------------------------------------------
+# parse_replica_groups — the regex-bug regression surface
+# ---------------------------------------------------------------------------
+
+
+def test_nested_groups_all_parsed():
+    # the old _GROUPS_LIST_RE stopped at the first '}' and saw one group
+    assert parse_replica_groups(
+        "replica_groups={{0,2,4,6},{1,3,5,7}},") == [4, 4]
+
+
+def test_single_full_group():
+    assert parse_replica_groups(
+        "replica_groups={{0,1,2,3,4,5,6,7}},") == [8]
+
+
+def test_empty_groups_use_module_default():
+    # replica_groups={} means ALL participants — the old parser returned 1
+    assert parse_replica_groups("replica_groups={},", 32) == [32]
+
+
+def test_iota_v2_format():
+    assert parse_replica_groups("replica_groups=[2,4]<=[8],") == [4, 4]
+
+
+def test_flat_single_group_form():
+    assert parse_replica_groups("replica_groups={0,1,2},") == [3]
+
+
+def test_no_groups_attribute_defaults():
+    assert parse_replica_groups("no groups here", 16) == [16]
+
+
+def test_group_size_is_first_group():
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}},") == 4
+    assert _group_size("replica_groups={},", 12) == 12
+
+
+def test_module_device_count_partitions_times_replicas():
+    assert module_device_count(
+        "HloModule m, num_partitions=4, replica_count=2\n") == 8
+    assert module_device_count("HloModule m, num_partitions=512\n") == 512
+    assert module_device_count("HloModule m, is_scheduled=true\n") == 1
+
+
+# ---------------------------------------------------------------------------
+# dense DP all-reduce fixture (nested groups + empty groups, num_partitions=8)
+# ---------------------------------------------------------------------------
+
+
+def test_dense_dp_counts_and_kinds():
+    c = parse_collectives(fixture("dense_dp_allreduce.txt"))
+    assert c["all-reduce"]["count"] == 2
+    assert c["total_count"] == 2
+    for kind in ("all-gather", "reduce-scatter", "all-to-all",
+                 "collective-permute"):
+        assert c[kind]["count"] == 0
+
+
+def test_dense_dp_group_sizes():
+    c = parse_collectives(fixture("dense_dp_allreduce.txt"))
+    # grad AR over 2 groups of 4; the {} AR spans all 8 partitions
+    assert set(c["all-reduce"]["by_group"]) == {"4", "8"}
+
+
+def test_dense_dp_exact_wire_bytes():
+    c = parse_collectives(fixture("dense_dp_allreduce.txt"))
+    grad_payload = 1024 * 512 * 4            # f32[1024,512]
+    full_payload = 256 * 4                   # f32[256]
+    assert c["all-reduce"]["payload_bytes"] == grad_payload + full_payload
+    # ring AR wire: 2(g-1)/g * payload
+    assert c["all-reduce"]["by_group"]["4"] == \
+        pytest.approx(2 * 3 / 4 * grad_payload)
+    assert c["all-reduce"]["by_group"]["8"] == \
+        pytest.approx(2 * 7 / 8 * full_payload)
+    assert c["total_wire_bytes"] == pytest.approx(
+        2 * 3 / 4 * grad_payload + 2 * 7 / 8 * full_payload)
+
+
+def test_dense_dp_module_walker_agrees_with_flat_parser():
+    text = fixture("dense_dp_allreduce.txt")
+    flat = parse_collectives(text)
+    walked = HloModule(text).total_collectives()
+    assert walked["total_count"] == flat["total_count"]
+    assert walked["total_wire_bytes"] == \
+        pytest.approx(flat["total_wire_bytes"])
+    assert walked["all-reduce"]["by_group"].keys() == \
+        flat["all-reduce"]["by_group"].keys()
+
+
+# ---------------------------------------------------------------------------
+# TP all-gather + reduce-scatter fixture (iota + nested formats)
+# ---------------------------------------------------------------------------
+
+
+def test_tp_kinds_and_groups():
+    c = parse_collectives(fixture("tp_allgather_rs.txt"))
+    assert c["all-gather"]["count"] == 1
+    assert c["reduce-scatter"]["count"] == 1
+    assert c["all-reduce"]["count"] == 0
+    assert set(c["all-gather"]["by_group"]) == {"4"}      # [2,4]<=[8]
+    assert set(c["reduce-scatter"]["by_group"]) == {"4"}  # {{0..3},{4..7}}
+
+
+def test_tp_exact_wire_bytes():
+    c = parse_collectives(fixture("tp_allgather_rs.txt"))
+    ag_out = 4096 * 1024 * 2                 # bf16[4096,1024] output
+    rs_out = 1024 * 1024 * 2                 # bf16[1024,1024] output
+    assert c["all-gather"]["payload_bytes"] == ag_out
+    assert c["reduce-scatter"]["payload_bytes"] == rs_out
+    assert c["all-gather"]["wire_bytes"] == pytest.approx(3 / 4 * ag_out)
+    # RS wire: (g-1) * output shard == (g-1)/g * input
+    assert c["reduce-scatter"]["wire_bytes"] == pytest.approx(3 * rs_out)
+    # the two are inverse ops over the same tensor: equal wire traffic
+    assert c["all-gather"]["wire_bytes"] == \
+        pytest.approx(c["reduce-scatter"]["wire_bytes"])
+
+
+# ---------------------------------------------------------------------------
+# MoE all-to-all fixture (16-wide EP group + a pipeline permute)
+# ---------------------------------------------------------------------------
+
+
+def test_moe_alltoall_kind_and_group():
+    c = parse_collectives(fixture("moe_alltoall.txt"))
+    assert c["all-to-all"]["count"] == 1
+    assert set(c["all-to-all"]["by_group"]) == {"16"}
+    assert c["collective-permute"]["count"] == 1
+
+
+def test_moe_alltoall_exact_wire_bytes():
+    c = parse_collectives(fixture("moe_alltoall.txt"))
+    a2a_payload = 16 * 32 * 512 * 2          # bf16[16,32,512]
+    perm_payload = 8 * 128 * 4               # f32[8,128]
+    assert c["all-to-all"]["payload_bytes"] == a2a_payload
+    assert c["all-to-all"]["wire_bytes"] == \
+        pytest.approx(15 / 16 * a2a_payload)
+    assert c["collective-permute"]["wire_bytes"] == perm_payload
+    assert c["total_wire_bytes"] == \
+        pytest.approx(15 / 16 * a2a_payload + perm_payload)
+
+
+# ---------------------------------------------------------------------------
+# empty replica_groups={} fixture (num_partitions=4 x replica_count=2)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_groups_span_all_devices():
+    text = fixture("empty_groups_allreduce.txt")
+    assert module_device_count(text) == 8
+    c = parse_collectives(text)
+    # the whole point of the fix: group is 8, not 1 (which would zero wire)
+    assert set(c["all-reduce"]["by_group"]) == {"8"}
+    payload = 256 * 256 * 4
+    assert c["all-reduce"]["wire_bytes"] == pytest.approx(2 * 7 / 8 * payload)
+    assert c["all-reduce"]["wire_bytes"] > 0
+
+
+def test_empty_groups_module_walker_sees_device_count():
+    mod = HloModule(fixture("empty_groups_allreduce.txt"))
+    assert mod.device_count == 8
+    walked = mod.total_collectives()
+    assert set(walked["all-reduce"]["by_group"]) == {"8"}
+
+
+def test_dryrun_reexports_parser():
+    # back-compat: the dry-run module re-exports the moved parser
+    import importlib
+    spec = importlib.util.find_spec("repro.launch.dryrun")
+    assert spec is not None
+    src = open(spec.origin).read()
+    assert "from repro.launch.hloparse import" in src
+    assert "parse_collectives" in src

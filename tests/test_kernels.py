@@ -88,6 +88,7 @@ def test_flash_attention_model_layout_matches_layers():
                                atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.slow
 @given(sq=st.integers(1, 80), skv=st.integers(1, 80),
        bq=st.sampled_from([8, 16, 32]), bk=st.sampled_from([8, 16, 32]))
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,115 @@
+"""Property-based tests for plane spraying byte accounting.
+
+Invariants under random payloads, plane counts and chunk sizes: the
+whole-chunk round-robin split conserves bytes and stays balanced within
+one chunk, the vectorized simulator split matches the scalar reference,
+sprayed-collective chunk counts follow ``plane_chunk_count``'s contract,
+and dead-plane re-spray conserves bytes while never assigning work to a
+dead plane.
+"""
+
+import math
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.collectives import plane_chunk_count
+from repro.core.hyperx import MPHX
+from repro.core.planes import SprayConfig, split_chunks
+from repro.sim.events import FlowSpec
+from repro.sim.spray import _per_plane_bytes, simulate_sprayed
+
+planes_st = st.integers(1, 8)
+chunk_st = st.sampled_from([1, 7, 1 << 10, 1 << 17, 1 << 20])
+bytes_st = st.integers(0, 1 << 24)
+
+
+def _bounded(total: int, chunk: int) -> int:
+    """Cap the chunk count per example: the scalar ``split_chunks``
+    reference loops once per chunk, so tiny chunks on 16MB payloads
+    would grind (the invariant doesn't need millions of chunks)."""
+    return total % (chunk * 512 + 1)
+
+
+@given(total=bytes_st, n=planes_st, chunk=chunk_st)
+@settings(max_examples=60, deadline=None)
+def test_split_chunks_conserves_bytes(total, n, chunk):
+    total = _bounded(total, chunk)
+    cfg = SprayConfig(n_planes=n, chunk_bytes=chunk)
+    per = split_chunks(total, cfg)
+    assert len(per) == n
+    assert sum(per) == total
+    assert all(b >= 0 for b in per)
+
+
+@given(total=bytes_st, n=planes_st, chunk=chunk_st)
+@settings(max_examples=60, deadline=None)
+def test_split_chunks_balanced_within_one_chunk(total, n, chunk):
+    total = _bounded(total, chunk)
+    cfg = SprayConfig(n_planes=n, chunk_bytes=chunk)
+    per = split_chunks(total, cfg)
+    assert max(per) - min(per) <= chunk
+
+
+@given(total=bytes_st, n=planes_st, chunk=chunk_st)
+@settings(max_examples=60, deadline=None)
+def test_vectorized_split_matches_scalar_reference(total, n, chunk):
+    """``repro.sim.spray._per_plane_bytes`` is the vectorized
+    ``planes.split_chunks`` — they must agree byte-for-byte."""
+    total = _bounded(total, chunk)
+    cfg = SprayConfig(n_planes=n, chunk_bytes=chunk)
+    vec = _per_plane_bytes(np.array([float(total)]), cfg)[0]
+    assert vec.tolist() == pytest.approx(split_chunks(total, cfg))
+
+
+@given(size=st.integers(1, 4096), n=planes_st)
+@settings(max_examples=80, deadline=None)
+def test_plane_chunk_count_contract(size, n):
+    """Largest even divisor <= n_planes, else no split — and an exact
+    ``size % count == 0`` guarantee either way."""
+    c = plane_chunk_count(size, n)
+    assert 1 <= c <= min(n, size)
+    assert size % c == 0
+    if size % min(n, size) == 0:
+        assert c == min(n, size)
+    else:
+        assert c == 1
+    # a c-way split of `size` elements is perfectly even: the sprayed
+    # collective's per-plane chunks all carry size/c elements
+    assert len({size // c}) == 1
+
+
+@given(total=st.integers(1, 1 << 22), dead=st.integers(0, 3),
+       chunk=st.sampled_from([1 << 10, 1 << 17]))
+@settings(max_examples=15, deadline=None)
+def test_dead_plane_respray_conserves_bytes(total, dead, chunk):
+    topo = MPHX(n=4, p=2, dims=(4,))
+    cfg = SprayConfig(n_planes=4, chunk_bytes=chunk,
+                      per_chunk_overhead_s=0.0)
+    skew = [1.0] * 4
+    skew[dead] = math.inf
+    flows = [FlowSpec(0, 1, total), FlowSpec(2, 3, total // 2)]
+    res = simulate_sprayed(topo, flows, cfg=cfg, plane_skew=skew)
+    # re-spray conserves every flow's bytes...
+    assert res.per_plane_bytes.sum(axis=1) == pytest.approx(
+        [total, total // 2])
+    # ...and the dead plane carries none of them and no transfer time
+    assert res.per_plane_bytes[:, dead].tolist() == [0.0, 0.0]
+    assert res.plane_transfer_s[:, dead].tolist() == [0.0, 0.0]
+    assert not res.stalled.any()
+
+
+@given(total=st.integers(1 << 16, 1 << 24))
+@settings(max_examples=10, deadline=None)
+def test_dead_plane_never_beats_healthy_fabric(total):
+    topo = MPHX(n=4, p=2, dims=(4,))
+    cfg = SprayConfig(n_planes=4, per_chunk_overhead_s=0.0)
+    flows = [FlowSpec(0, 1, total)]
+    healthy = simulate_sprayed(topo, flows, cfg=cfg)
+    degraded = simulate_sprayed(topo, flows, cfg=cfg,
+                                plane_skew=[1.0, 1.0, 1.0, math.inf])
+    assert degraded.makespan_s >= healthy.makespan_s
