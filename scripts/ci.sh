@@ -23,6 +23,19 @@ else
     python -m pytest -x -q "$@"
 fi
 
+if [[ "${SKIP_JAX_LANE:-0}" != "1" ]]; then
+    # jax-backend lane: the in-jit water-filling/event-loop paths and
+    # the Pallas segment kernels, pinned to the CPU backend so the lane
+    # is deterministic on any runner.  The nightly lane (PYTEST_MARKERS="")
+    # additionally runs the slow-marked 65K-NIC sim smoke in
+    # tests/test_sim_scale.py; the BENCH_sim_scale.json schema smoke runs
+    # in every lane.
+    JAX_PLATFORMS=cpu python -m pytest -x -q \
+        tests/test_fairshare_props.py tests/test_fairshare_golden.py \
+        tests/test_sim_scale.py tests/test_kernels.py \
+        ${PYTEST_MARKERS:+-m "$PYTEST_MARKERS"}
+fi
+
 if [[ "${SKIP_DOCS_SMOKE:-0}" != "1" ]]; then
     # docs can't rot: run the bash blocks of docs/routing.md +
     # docs/experiments.md + docs/simulation.md (smallest presets) end to end

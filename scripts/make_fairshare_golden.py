@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Regenerate the water-filling golden fixture.
+
+``tests/golden/fairshare_golden.json`` pins the *reference* (numpy)
+max-min solver's steady-state rates, link loads and measured-FCT
+percentiles on small fabrics for both routing engines.  The fixture was
+captured from the pre-jit solver; every rewritten path (in-jit
+``lax.while_loop``, Pallas segment kernel) must reproduce it to 1e-9
+(``tests/test_fairshare_golden.py``), so the fast paths are provably the
+same solver.
+
+Only rerun this script if the *model* intentionally changes (and say so
+in the PR): regenerating to paper over a diff defeats the fixture.
+
+Usage:  PYTHONPATH=src python scripts/make_fairshare_golden.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.dragonfly import Dragonfly
+from repro.core.hyperx import MPHX
+from repro.core.netsim import make_router
+from repro.core.routing_graph import graph_uniform_demands
+from repro.core.routing_vec import (hotspot_demands, neighbor_shift_demands,
+                                    uniform_demands)
+from repro.sim.events import simulate_demands, simulate_incidence
+from repro.sim.fairshare import flow_incidence, max_min_rates
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "tests", "golden", "fairshare_golden.json")
+
+# (cell name, topology factory, demand builder, incidence mode)
+CELLS = [
+    ("array/mphx-2p-8x8/uniform",
+     lambda: MPHX(n=2, p=8, dims=(8, 8)),
+     lambda t, o: uniform_demands(t, o), "minimal"),
+    ("array/mphx-2p-8x8/neighbor_shift",
+     lambda: MPHX(n=2, p=8, dims=(8, 8)),
+     lambda t, o: neighbor_shift_demands(t, o), "minimal"),
+    ("array/mphx-2p-8x8/hotspot_valiant",
+     lambda: MPHX(n=2, p=8, dims=(8, 8)),
+     lambda t, o: hotspot_demands(t, o), "valiant"),
+    ("graph/dragonfly-small/uniform",
+     lambda: Dragonfly(p=2, a=4, h=2, groups=9, name="Dragonfly (small)"),
+     lambda t, o: graph_uniform_demands(t, o), "minimal"),
+]
+
+# offered fractions of NIC bandwidth: one comfortably feasible level and
+# one past saturation, so the fixture freezes both cap-limited and
+# edge-saturated flows
+LOADS = (0.5, 1.2)
+FLOW_TIME_S = 200e-6
+
+
+def cell_record(topo, build, mode) -> dict:
+    router = make_router(topo, backend="numpy")
+    rec = {"topology": topo.name, "mode": mode, "loads": {}}
+    for frac in LOADS:
+        dem = build(topo, frac * topo.nic_bw_gbps)
+        inc = flow_incidence(router, dem, mode)
+        caps = np.asarray(dem.gbps, dtype=np.float64)
+        rates = max_min_rates(inc, caps, backend="numpy")
+        loads = inc.loads(rates)
+        row = simulate_demands(router, dem, FLOW_TIME_S, mode=mode,
+                               backend="numpy", inc=inc)
+        rec["loads"][str(frac)] = {
+            "n_flows": int(inc.n_flows),
+            "n_edges": int(inc.n_edges),
+            "nnz": int(inc.flow.shape[0]),
+            "rates_gbps": rates.tolist(),
+            "link_loads_gbps_nonzero": {
+                str(int(e)): float(loads[e]) for e in np.flatnonzero(loads)},
+            "fct": {k: row[k] for k in
+                    ("fct_p50_us", "fct_p95_us", "fct_p99_us",
+                     "slowdown_mean", "slowdown_p99", "sim_epochs",
+                     "sim_stalled", "sim_delivered_fraction")},
+        }
+    return rec
+
+
+def staggered_record() -> dict:
+    """A staggered-arrival event-loop trace: the full per-flow finish
+    times, not just percentiles — pins the epoch semantics exactly."""
+    topo = MPHX(n=2, p=8, dims=(8, 8))
+    router = make_router(topo, backend="numpy")
+    dem = neighbor_shift_demands(topo, 800.0)
+    inc = flow_incidence(router, dem, "minimal")
+    rng = np.random.default_rng(7)
+    size = rng.uniform(0.2, 1.0, inc.n_flows) * (1 << 22)
+    start = rng.uniform(0.0, 50e-6, inc.n_flows)
+    caps = rng.uniform(200.0, 1600.0, inc.n_flows)
+    res = simulate_incidence(inc, size, caps, start_s=start,
+                             backend="numpy")
+    return {
+        "topology": topo.name, "scenario": "neighbor_shift", "seed": 7,
+        "size_bytes": size.tolist(), "start_s": start.tolist(),
+        "rate_caps_gbps": caps.tolist(),
+        "finish_s": res.finish_s.tolist(),
+        "fct_s": res.fct_s.tolist(),
+        "edge_bytes_nonzero": {
+            str(int(e)): float(res.edge_bytes[e])
+            for e in np.flatnonzero(res.edge_bytes)},
+        "makespan_s": res.makespan_s, "n_epochs": res.n_epochs,
+    }
+
+
+def main() -> None:
+    fixture = {
+        "comment": "Golden pins of the reference (numpy) max-min "
+                   "water-filling solver and event loop, captured before "
+                   "the jit/Pallas rewrite.  See "
+                   "tests/test_fairshare_golden.py.",
+        "flow_time_s": FLOW_TIME_S,
+        "load_fractions": list(LOADS),
+        "cells": {},
+        "staggered": staggered_record(),
+    }
+    for name, topo_fn, build, mode in CELLS:
+        fixture["cells"][name] = cell_record(topo_fn(), build, mode)
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(fixture, f, indent=1)
+        f.write("\n")
+    n = sum(len(c["loads"]) for c in fixture["cells"].values())
+    print(f"wrote {OUT}: {len(fixture['cells'])} cells x {n} load rows "
+          f"+ 1 staggered trace")
+
+
+if __name__ == "__main__":
+    main()

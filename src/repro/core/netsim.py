@@ -213,7 +213,8 @@ def load_sweep(topo: Topology, demand_builder, mode: str = "adaptive",
                net: NetParams = DEFAULT_NET,
                engine: str = "auto", router=None,
                simulate: bool = False,
-               flow_time_s: float = 1e-3) -> "list[dict]":
+               flow_time_s: float = 1e-3,
+               sim_backend: "str | None" = None) -> "list[dict]":
     """Latency/throughput vs offered load for one traffic scenario.
 
     ``demand_builder(topo, offered_per_nic_gbps) -> DemandArrays``.  The
@@ -230,6 +231,10 @@ def load_sweep(topo: Topology, demand_builder, mode: str = "adaptive",
     and the event loop reports real FCT percentiles under max-min fair
     sharing.  Requires a fixed path spread (``minimal``, or ``valiant``
     on the array engine) — ``adaptive`` has no static per-flow routes.
+
+    ``sim_backend`` picks the fair-share solver path (``numpy`` / ``jax``
+    / ``pallas`` / ``auto`` — see :mod:`repro.sim.fairshare`); it defaults
+    to following ``backend`` (``jax`` routing → jit simulation).
     """
     if router is None:
         router = make_router(topo, backend=backend, engine=engine)
@@ -276,8 +281,10 @@ def load_sweep(topo: Topology, demand_builder, mode: str = "adaptive",
                 # static spreads don't depend on offered load — one
                 # extraction serves every level of the sweep
                 sim_inc = flow_incidence(router, demands, mode)
-            row.update(simulate_demands(router, demands, flow_time_s,
-                                        mode=mode, net=net, inc=sim_inc))
+            row.update(simulate_demands(
+                router, demands, flow_time_s, mode=mode, net=net,
+                inc=sim_inc,
+                backend=backend if sim_backend is None else sim_backend))
         rows.append(row)
     return rows
 

@@ -54,8 +54,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .routing_vec import (BaseLinkLoads, DemandArrays, backend_zeros,
-                          get_backend)
+from .routing_vec import (BaseLinkLoads, DemandArrays, IncidenceCacheMixin,
+                          backend_zeros, get_backend)
 from .topology import SwitchGraph, Topology
 
 Edge = tuple[int, int]
@@ -158,7 +158,7 @@ class GraphLinkLoads(BaseLinkLoads):
 # ---------------------------------------------------------------------------
 
 
-class GraphRouter:
+class GraphRouter(IncidenceCacheMixin):
     """Batched routing over any :class:`SwitchGraph` (or any
     :class:`Topology` exposing ``build_graph()``)."""
 
@@ -177,6 +177,7 @@ class GraphRouter:
             dst_chunk = max(1, int(8e6 // max(self.csr.n_edges, 1)))
         self.dst_chunk = dst_chunk
         self._hops: "np.ndarray | None" = None
+        self.incidence_calls = 0
 
     @property
     def hops(self) -> np.ndarray:
@@ -252,6 +253,7 @@ class GraphRouter:
                 f"no static per-flow incidence for graph-engine mode "
                 f"{mode!r} (valiant averages over all intermediates, "
                 "adaptive re-routes under load); use minimal")
+        self.incidence_calls += 1
         src = np.asarray(demands.src, dtype=np.int64)
         dst = np.asarray(demands.dst, dtype=np.int64)
         keep = np.flatnonzero(src != dst)

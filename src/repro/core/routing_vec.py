@@ -358,13 +358,75 @@ def ring_demands(topo: MPHX, offered_per_nic_gbps: float) -> DemandArrays:
 # ---------------------------------------------------------------------------
 
 
-class VectorizedHyperXRouter:
+class IncidenceCacheMixin:
+    """Pair-level cache for per-flow incidence extraction.
+
+    A fixed path spread depends only on the (src, dst) switch pair and the
+    mode — not on the offered Gbps — so the per-pair COO rows
+    ``(edge_slots, fracs)`` can be reused across flow sets.  The epoch /
+    batch loops of the flow simulator re-extract the same pairs over and
+    over (collective phases reuse a schedule's pairs every phase; epoch
+    re-solves reuse the whole flow set); routing them through
+    :meth:`incidence_cached` only walks pairs never seen before.
+
+    ``incidence_calls`` counts *engine walks* (full :meth:`incidence`
+    extractions) — the hook ``tests/test_sim_scale.py`` uses to assert
+    re-solves stop re-extracting.  Invalidate with
+    :meth:`reset_incidence_cache` after anything that changes routes
+    (e.g. failure masking builds a new router, which starts cold anyway).
+    """
+
+    incidence_calls: int = 0
+
+    def _pair_cache(self, mode: str) -> dict:
+        if not hasattr(self, "_inc_cache"):
+            self._inc_cache: dict = {}
+        return self._inc_cache.setdefault(mode, {})
+
+    def reset_incidence_cache(self) -> None:
+        self._inc_cache = {}
+
+    def incidence_cached(self, demands: "DemandArrays", mode: str = "minimal"):
+        """:meth:`incidence`, but only walking (src, dst) pairs not in the
+        cache; cached pairs' rows are replayed.  Same COO contract (rows
+        grouped by flow, slot-sorted within a flow)."""
+        cache = self._pair_cache(mode)
+        src = np.asarray(demands.src, dtype=np.int64)
+        dst = np.asarray(demands.dst, dtype=np.int64)
+        uniq, inv = np.unique(np.stack([src, dst], axis=1), axis=0,
+                              return_inverse=True)
+        pairs = [tuple(p) for p in uniq.tolist()]
+        miss = [p for p in pairs if p not in cache]
+        if miss:
+            ma = np.asarray(miss, dtype=np.int64)
+            sub = DemandArrays(ma[:, 0], ma[:, 1], np.ones(ma.shape[0]))
+            f, s, fr = self.incidence(sub, mode)
+            order = np.argsort(f, kind="stable")
+            f, s, fr = f[order], s[order], fr[order]
+            bounds = np.searchsorted(f, np.arange(ma.shape[0] + 1))
+            for j, p in enumerate(miss):
+                lo, hi = int(bounds[j]), int(bounds[j + 1])
+                cache[p] = (s[lo:hi], fr[lo:hi])
+        per_pair = [cache[p] for p in pairs]
+        counts = np.array([e.size for e, _ in per_pair], dtype=np.int64)
+        n = src.shape[0]
+        if n == 0 or int(counts[inv].sum()) == 0:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z.copy(), np.zeros(0)
+        flow = np.repeat(np.arange(n, dtype=np.int64), counts[inv])
+        edge = np.concatenate([per_pair[j][0] for j in inv])
+        frac = np.concatenate([per_pair[j][1] for j in inv])
+        return flow, edge, frac
+
+
+class VectorizedHyperXRouter(IncidenceCacheMixin):
     """Array engine for routing whole demand matrices over one MPHX plane."""
 
     def __init__(self, topo: MPHX, backend: str = "auto"):
         self.topo = topo
         self.index = EdgeIndex(topo)
         self.backend, self.xp = get_backend(backend)
+        self.incidence_calls = 0
 
     # ------------------------------------------------------------ helpers ----
 
@@ -490,6 +552,7 @@ class VectorizedHyperXRouter:
         deroutes); ``adaptive`` re-routes under load and has no static
         incidence.
         """
+        self.incidence_calls += 1
         src, dst, gbps, cs, cd = self._prep(demands)
         n_full = math.factorial(self.index.D)
         flows, slots_l, fracs = [], [], []

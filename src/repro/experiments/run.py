@@ -77,6 +77,13 @@ def build_parser() -> argparse.ArgumentParser:
                    "offered rate (default 200us)")
     p.add_argument("--sim-collective-mb", type=float, default=16.0,
                    help="sim suite: measured-collective payload per NIC")
+    p.add_argument("--sim-backend",
+                   choices=["numpy", "jax", "pallas", "auto"],
+                   default="numpy",
+                   help="sim/sweep suites: fair-share solver path — "
+                   "numpy reference loop, jax in-jit while_loop, pallas "
+                   "segment kernels (repro.sim.fairshare); jax/pallas "
+                   "make the 65K-NIC presets tractable")
     p.add_argument("--failures", nargs="+", default=None,
                    metavar="SPEC",
                    help="failure specs for the failures suite, e.g. "
@@ -131,7 +138,8 @@ def main(argv: "list[str] | None" = None) -> int:
             else (0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
             msg_bytes=args.msg_bytes, backend=args.backend,
             engine=args.engine, simulate=args.simulate,
-            flow_time_s=args.flow_time_us * 1e-6)
+            flow_time_s=args.flow_time_us * 1e-6,
+            sim_backend=args.sim_backend)
         print(f"sweep: {payload['params']['n_routed_rows']} routed rows, "
               f"{payload['params']['n_skipped']} skipped -> "
               f"{args.out}/sweep.json, {args.out}/sweep.md")
@@ -142,7 +150,8 @@ def main(argv: "list[str] | None" = None) -> int:
             flow_time_s=args.flow_time_us * 1e-6,
             msg_bytes=args.msg_bytes,
             collective_mb=args.sim_collective_mb,
-            backend=args.backend, engine=args.engine)
+            backend=args.backend, engine=args.engine,
+            sim_backend=args.sim_backend)
         agree = payload["params"]["all_steady_checks_agree_1e-6"]
         print(f"sim: {len(payload['rows'])} rows "
               f"(steady-state agreement: {agree}) -> "

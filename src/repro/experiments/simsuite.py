@@ -43,9 +43,15 @@ DEFAULT_FAILURE_SPECS = ["link:0.01", "link:0.05"]
 SIM_MODE = "minimal"
 
 
+# collective schedules serialize O(n_nics) phases — at the 65K-NIC
+# Table-2 presets that is ~130k fabric solves per collective, which is a
+# dedicated benchmark (``benchmarks/run.py sim-scale``), not a suite row
+MAX_COLLECTIVE_NICS = 4096
+
+
 def _sim_topo_rows(topo: Topology, scenario_names, load_fractions,
                    flow_time_s, msg_bytes, backend, engine,
-                   collective_mb) -> "list[dict]":
+                   collective_mb, sim_backend="numpy") -> "list[dict]":
     engine_name = resolve_engine(topo, engine)
     router = make_router(topo, backend=backend, engine=engine)
     graph = getattr(router, "graph", None)
@@ -82,7 +88,8 @@ def _sim_topo_rows(topo: Topology, scenario_names, load_fractions,
                            load_fractions=load_fractions,
                            msg_bytes=msg_bytes, backend=backend,
                            engine=engine, router=router, simulate=True,
-                           flow_time_s=flow_time_s)
+                           flow_time_s=flow_time_s,
+                           sim_backend=sim_backend)
         dt = time.perf_counter() - t0
         for r in sweep:
             rows.append({"topology": topo.name, "scenario": name,
@@ -91,10 +98,20 @@ def _sim_topo_rows(topo: Topology, scenario_names, load_fractions,
                          "sim_wall_s": round(dt, 4)})
     # measured collectives (every registered collective schedule kind)
     for kind in SIM_COLLECTIVES:
+        if topo.n_nics > MAX_COLLECTIVE_NICS:
+            reason = (f"{topo.n_nics} NICs > {MAX_COLLECTIVE_NICS}: "
+                      "collective schedules serialize O(n_nics) phases; "
+                      "use benchmarks/run.py sim-scale for 65K fabrics")
+            print(f"sim: skipping collective {kind!r} on {topo.name!r}: "
+                  f"{reason}", file=sys.stderr)
+            rows.append({"topology": topo.name, "scenario": kind,
+                         "kind": "skip", "engine": engine_name,
+                         "skipped": True, "reason": reason})
+            continue
         t0 = time.perf_counter()
         row = simulate_collective(topo, kind,
                                   collective_mb * 2**20, router=router,
-                                  mode=SIM_MODE, backend=backend)
+                                  mode=SIM_MODE, backend=sim_backend)
         rows.append({"kind": "collective", "mode": SIM_MODE,
                      "engine": engine_name, **row,
                      "sim_wall_s": round(time.perf_counter() - t0, 4)})
@@ -109,9 +126,17 @@ def run_sim_suite(outdir: str = DEFAULT_OUTDIR,
                   msg_bytes: float = 4096,
                   collective_mb: float = 16.0,
                   backend: str = "auto",
-                  engine: str = "auto") -> dict:
+                  engine: str = "auto",
+                  sim_backend: str = "numpy") -> dict:
     """Run the flow simulator over (topology, scenario, load) cells and
-    write ``sim.json`` / ``sim.md``."""
+    write ``sim.json`` / ``sim.md``.
+
+    ``backend``/``engine`` select the routing array backend and engine as
+    everywhere else; ``sim_backend`` picks the fair-share solver path
+    (``numpy`` reference loop, ``jax`` in-jit while_loop, ``pallas``
+    segment kernels, or ``auto`` — :mod:`repro.sim.fairshare`).  The jit
+    paths make the 65K-NIC Table-2 presets (``mphx-8p-256``,
+    ``mphx-4p-86x9``) tractable suite cells."""
     names = topo_names or list(DEFAULT_SIM_TOPOS)
     scenario_names = scenario_names or list(DEFAULT_SIM_SCENARIOS)
     all_rows = []
@@ -128,7 +153,7 @@ def run_sim_suite(outdir: str = DEFAULT_OUTDIR,
             continue
         all_rows += _sim_topo_rows(topo, scenario_names, load_fractions,
                                    flow_time_s, msg_bytes, backend, engine,
-                                   collective_mb)
+                                   collective_mb, sim_backend=sim_backend)
     checks = [r for r in all_rows if r.get("kind") == "steady_check"]
     payload = artifact_payload(
         "sim",
@@ -136,7 +161,7 @@ def run_sim_suite(outdir: str = DEFAULT_OUTDIR,
          "mode": SIM_MODE, "load_fractions": list(load_fractions),
          "flow_time_s": flow_time_s, "msg_bytes": msg_bytes,
          "collective_mb": collective_mb, "backend": backend,
-         "engine": engine,
+         "engine": engine, "sim_backend": sim_backend,
          "n_steady_checks": len(checks),
          "all_steady_checks_agree_1e-6":
              bool(all(r["agrees_1e-6"] for r in checks)) if checks

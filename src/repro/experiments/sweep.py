@@ -143,7 +143,8 @@ def sweep_topology(topo: Topology, scenario_names: "list[str] | None" = None,
                    backend: str = "auto",
                    engine: str = "auto",
                    simulate: bool = False,
-                   flow_time_s: float = 200e-6) -> list[dict]:
+                   flow_time_s: float = 200e-6,
+                   sim_backend: str = "numpy") -> list[dict]:
     """Latency/throughput-vs-load rows for one topology instance.
 
     Returns routed rows plus, for every requested scenario that does not
@@ -186,7 +187,8 @@ def sweep_topology(topo: Topology, scenario_names: "list[str] | None" = None,
                                load_fractions=load_fractions,
                                msg_bytes=msg_bytes, backend=backend,
                                engine=engine, router=router,
-                               simulate=sim_here, flow_time_s=flow_time_s)
+                               simulate=sim_here, flow_time_s=flow_time_s,
+                               sim_backend=sim_backend)
             dt = time.perf_counter() - t0
             for r in sweep:
                 rows.append({"topology": topo.name, "scenario": name,
@@ -205,7 +207,8 @@ def run_sweep_suite(outdir: str = DEFAULT_OUTDIR,
                     backend: str = "auto",
                     engine: str = "auto",
                     simulate: bool = False,
-                    flow_time_s: float = 200e-6) -> dict:
+                    flow_time_s: float = 200e-6,
+                    sim_backend: str = "numpy") -> dict:
     """Sweep every (topology, scenario, mode, load) cell and write artifacts."""
     names = topo_names or list(DEFAULT_SWEEP_TOPOS)
     all_rows = []
@@ -213,7 +216,8 @@ def run_sweep_suite(outdir: str = DEFAULT_OUTDIR,
         topo = SWEEP_TOPOLOGIES[tn]
         all_rows += sweep_topology(topo, scenario_names, modes,
                                    load_fractions, msg_bytes, backend,
-                                   engine, simulate, flow_time_s)
+                                   engine, simulate, flow_time_s,
+                                   sim_backend=sim_backend)
     routed = [r for r in all_rows if not r.get("skipped")]
     skipped = [r for r in all_rows if r.get("skipped")]
     payload = artifact_payload(

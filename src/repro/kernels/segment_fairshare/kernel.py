@@ -1,0 +1,114 @@
+"""Pallas segment-reduce kernels for the COO flow-link incidence tensor.
+
+The max-min water-filling solver (:mod:`repro.sim.fairshare`) spends its
+rounds in two sparse reductions over the coalesced COO incidence arrays:
+
+* ``segment_sum``  — per-edge live weight ``sum_f frac[f,e]`` (and the
+  per-flow saturated-fraction sum on the freeze step);
+* ``segment_min``  — per-flow bottleneck ``min_e cap[e]/frac[f,e]``.
+
+Both are scatter reductions with data-dependent indices, which TPUs hate
+in their natural form.  The kernels below recast them as **one-hot
+contractions**: the grid tiles (segment blocks x entry blocks), each step
+builds a ``(block_nnz, block_seg)`` one-hot mask of which entries land in
+this segment tile and reduces it on the VPU/MXU, accumulating into the
+resident output tile across the entry-block axis (the classic Pallas
+revisiting-output accumulation pattern; the entry axis is innermost so
+each output tile is initialized once at entry-block 0 and stays in VMEM).
+
+Entries are padded with an out-of-range segment id, so padding never hits
+a real bin.  ``interpret=True`` (the default) runs the same kernel on CPU
+via the Pallas interpreter at float64 — the cross-validation fallback the
+test layer uses; pass ``interpret=False`` on a real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onehot(ids, lo, block_seg: int, dtype):
+    """(bn, block_seg) mask of entries whose segment falls in this tile."""
+    local = ids - lo
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, block_seg), 1)
+    return (local[:, None] == iota).astype(dtype)
+
+
+def _segment_sum_kernel(ids_ref, val_ref, o_ref, *, block_seg: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]
+    vals = val_ref[...]
+    hot = _onehot(ids, pl.program_id(0) * block_seg, block_seg, vals.dtype)
+    o_ref[...] += (vals[:, None] * hot).sum(axis=0)
+
+
+def _segment_min_kernel(ids_ref, val_ref, o_ref, *, block_seg: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    ids = ids_ref[...]
+    vals = val_ref[...]
+    hot = _onehot(ids, pl.program_id(0) * block_seg, block_seg,
+                  vals.dtype) > 0
+    cand = jnp.where(hot, vals[:, None], jnp.inf).min(axis=0)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+def _pad_coo(values, segment_ids, num_segments: int, block_nnz: int):
+    n = values.shape[0]
+    bn = max(min(block_nnz, n), 1)
+    pad = (-n) % bn if n else bn
+    if pad:
+        values = jnp.pad(values, (0, pad))
+        # out-of-range id: the padded entries miss every segment tile
+        segment_ids = jnp.pad(segment_ids, (0, pad),
+                              constant_values=num_segments)
+    return values, segment_ids.astype(jnp.int32), bn
+
+
+def _segment_call(kernel, values, segment_ids, num_segments: int,
+                  block_nnz: int, block_seg: int, interpret: bool):
+    values, ids, bn = _pad_coo(values, segment_ids, num_segments, block_nnz)
+    bs = max(min(block_seg, num_segments), 1)
+    ps = (-num_segments) % bs
+    grid = ((num_segments + ps) // bs, values.shape[0] // bn)
+    out = pl.pallas_call(
+        functools.partial(kernel, block_seg=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda s, i: (i,)),
+            pl.BlockSpec((bn,), lambda s, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda s, i: (s,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments + ps,), values.dtype),
+        interpret=interpret,
+    )(ids, values)
+    return out[:num_segments]
+
+
+def segment_sum(values, segment_ids, num_segments: int, *,
+                block_nnz: int = 1024, block_seg: int = 512,
+                interpret: bool = True):
+    """Scatter-add ``values`` (NNZ,) into ``num_segments`` bins."""
+    if num_segments == 0:
+        return jnp.zeros((0,), dtype=values.dtype)
+    return _segment_call(_segment_sum_kernel, values, segment_ids,
+                         num_segments, block_nnz, block_seg, interpret)
+
+
+def segment_min(values, segment_ids, num_segments: int, *,
+                block_nnz: int = 1024, block_seg: int = 512,
+                interpret: bool = True):
+    """Per-segment min of ``values`` (NNZ,); empty segments hold +inf."""
+    if num_segments == 0:
+        return jnp.zeros((0,), dtype=values.dtype)
+    return _segment_call(_segment_min_kernel, values, segment_ids,
+                         num_segments, block_nnz, block_seg, interpret)

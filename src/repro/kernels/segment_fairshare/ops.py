@@ -1,0 +1,23 @@
+"""jit'd wrappers for the segment-reduce kernels (static segment count)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import segment_min, segment_sum
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def coo_segment_sum(values, segment_ids, *, num_segments: int,
+                    interpret: bool = True):
+    return segment_sum(values, segment_ids, num_segments,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def coo_segment_min(values, segment_ids, *, num_segments: int,
+                    interpret: bool = True):
+    return segment_min(values, segment_ids, num_segments,
+                       interpret=interpret)

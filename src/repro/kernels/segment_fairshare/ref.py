@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the COO segment reductions of the water-filling
+solver (`jax.ops.segment_sum` / `segment_min` — the XLA scatter path the
+Pallas kernel must reproduce bit-for-near-bit)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(values, segment_ids, num_segments: int):
+    """(NNZ,) values scatter-added into (num_segments,) bins."""
+    return jax.ops.segment_sum(values, segment_ids,
+                               num_segments=num_segments)
+
+
+def segment_min_ref(values, segment_ids, num_segments: int):
+    """(NNZ,) values segment-min'd into (num_segments,) bins; empty
+    segments hold +inf (the water-filling 'no constraint' identity)."""
+    init = jnp.full(num_segments, jnp.inf, dtype=values.dtype)
+    return init.at[segment_ids].min(values)

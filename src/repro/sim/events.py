@@ -19,13 +19,16 @@ uncontended flow's FCT is exactly the closed-form
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.netsim import DEFAULT_NET, NetParams, gbps_to_Bps
 from repro.core.routing_vec import DemandArrays
-from .fairshare import FlowIncidence, flow_incidence, max_min_rates
+from .fairshare import (FlowIncidence, _segment_sum, _waterfill_body,
+                        _waterfill_scale, flow_incidence, max_min_rates,
+                        resolve_sim_backend)
 
 
 @dataclass(frozen=True)
@@ -116,6 +119,13 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
     Active flows whose fair share is 0 (every path crosses a
     zero-capacity edge — e.g. after failure injection) are marked stalled
     (``finish_s = inf``) rather than looping forever.
+
+    ``backend`` picks the epoch engine: ``numpy`` is the reference Python
+    event loop (one :func:`max_min_rates` call per epoch); ``jax`` /
+    ``pallas`` run the *entire* loop — epoch advance plus the nested
+    water-filling — as one jitted ``lax.while_loop``, so a simulation is
+    a single device call instead of a Python round-trip per re-solve
+    (semantics pinned to the numpy loop at 1e-9 by the golden fixtures).
     """
     F = inc.n_flows
     size = np.broadcast_to(np.asarray(size_bytes, dtype=np.float64),
@@ -127,6 +137,10 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
                              (F,)).copy())
     if np.any(size < 0) or np.any(caps <= 0):
         raise ValueError("sizes must be >= 0 and rate caps > 0")
+    backend = resolve_sim_backend(backend)
+    if backend != "numpy" and F > 0:
+        return _simulate_incidence_jit(inc, size, caps, start, net,
+                                       use_pallas=(backend == "pallas"))
     remaining = size.copy()
     finish = np.full(F, np.inf)
     finish[size == 0] = start[size == 0]
@@ -168,6 +182,13 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
         finish[just_done] = t
     else:
         raise RuntimeError(f"flow sim failed to converge ({F} flows)")
+    return _finalize_result(inc, size, caps, start, finish, edge_bytes,
+                            n_epochs, net)
+
+
+def _finalize_result(inc: FlowIncidence, size, caps, start, finish,
+                     edge_bytes, n_epochs: int, net: NetParams
+                     ) -> FlowSimResult:
     lat = path_latency(inc, net)
     fct = finish - start + lat
     done = np.isfinite(finish)
@@ -177,6 +198,131 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
         makespan_s=float((finish[done] - start.min()).max())
         if done.any() else 0.0,
         n_epochs=n_epochs)
+
+
+@functools.lru_cache(maxsize=1)
+def _event_loop_jit():
+    """Build (once) the jitted whole-simulation loop.
+
+    One ``lax.while_loop`` iteration is one epoch of the reference loop
+    in :func:`simulate_incidence`: admit arrivals / detect completion,
+    re-solve max-min fair shares with the nested water-filling
+    while_loop (:func:`repro.sim.fairshare._waterfill_body`), advance to
+    the next start/finish event.  Same constants, same branch structure,
+    same freeze tolerances — the golden fixtures hold it to 1e-9.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    @functools.partial(jax.jit, static_argnames=("E", "use_pallas"))
+    def run(flow, edge, frac, cap_e, size, caps, start, tol, *,
+            E: int, use_pallas: bool):
+        F = size.shape[0]
+        eps = 1e-9
+        thresh = eps * jnp.maximum(size, 1.0)
+        wf_cond, wf_body, wf_init = _waterfill_body(
+            flow, edge, frac, cap_e, caps, tol, E, use_pallas)
+
+        def solve(active):
+            rates, unfrozen, _, _ = jax.lax.while_loop(
+                wf_cond, wf_body, wf_init(active))
+            return rates, jnp.logical_not(unfrozen.any())
+
+        def cond(s):
+            return jnp.logical_and(~s["done"], s["i"] < 4 * F + 8)
+
+        def body(s):
+            t = s["t"]
+            open_f = (s["remaining"] > thresh) & ~s["stalled"]
+            active = open_f & (start <= t * (1 + 1e-12) + 1e-18)
+            pend = open_f & ~active
+            has_pending = pend.any()
+            pending_min = jnp.where(pend, start, jnp.inf).min()
+
+            def no_active(s):
+                # break if nothing is pending, else jump to next arrival
+                return dict(s, t=jnp.where(has_pending, pending_min, t),
+                            done=s["done"] | ~has_pending)
+
+            def with_active(s):
+                rates, conv = solve(active)
+                rates = jnp.where(active, rates, 0.0)
+                dead = active & (rates <= 0)
+                do_stall = dead.any() & ~has_pending
+                stall_set = dead & do_stall
+                act = active & ~stall_set
+                proceed = act.any()
+                Bps = rates * (1e9 / 8.0)
+                per_dt = jnp.where(
+                    act, s["remaining"] / jnp.maximum(Bps, 1e-30),
+                    jnp.inf)
+                dt_arr = jnp.where(has_pending, pending_min - t, jnp.inf)
+                dt = jnp.where(proceed,
+                               jnp.minimum(per_dt.min(), dt_arr), 0.0)
+                moved = Bps * dt
+                remaining = jnp.maximum(s["remaining"] - moved, 0.0)
+                t2 = t + dt
+                just_done = act & (remaining <= thresh)
+                return dict(
+                    s, t=t2, remaining=remaining,
+                    finish=jnp.where(just_done, t2, s["finish"]),
+                    stalled=s["stalled"] | stall_set,
+                    edge_bytes=s["edge_bytes"] + _segment_sum(
+                        moved[flow] * frac, edge, E, use_pallas),
+                    n_epochs=s["n_epochs"] + 1, ok=s["ok"] & conv)
+
+            s2 = jax.lax.cond(active.any(), with_active, no_active, s)
+            return dict(s2, i=s["i"] + 1)
+
+        state = {
+            "t": start.min(),
+            "remaining": size,
+            "finish": jnp.where(size == 0, start, jnp.inf),
+            "stalled": jnp.zeros(F, dtype=bool),
+            "edge_bytes": jnp.zeros(E, dtype=size.dtype),
+            "n_epochs": jnp.int32(0),
+            "i": jnp.int32(0),
+            "done": jnp.bool_(False),
+            "ok": jnp.bool_(True),
+        }
+        out = jax.lax.while_loop(cond, body, state)
+        return (out["finish"], out["edge_bytes"], out["n_epochs"],
+                out["done"], out["ok"])
+
+    return run
+
+
+def _simulate_incidence_jit(inc: FlowIncidence, size, caps, start,
+                            net: NetParams, use_pallas: bool
+                            ) -> FlowSimResult:
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from .fairshare import _compress_edges
+
+    tol = 1e-12 * _waterfill_scale(inc, caps)
+    # solve over the used-edge subset (identical float sequence — unused
+    # edges never saturate) and scatter edge_bytes back at the end
+    used, edge_c, cap_c = _compress_edges(inc)
+    with enable_x64():
+        finish, used_bytes, n_epochs, done, ok = _event_loop_jit()(
+            jnp.asarray(inc.flow), jnp.asarray(edge_c),
+            jnp.asarray(inc.frac), jnp.asarray(cap_c),
+            jnp.asarray(size), jnp.asarray(caps), jnp.asarray(start),
+            jnp.asarray(tol), E=used.size, use_pallas=use_pallas)
+        if not bool(ok):
+            raise RuntimeError("water-filling failed to converge "
+                               f"({inc.n_flows} flows, {inc.n_edges} "
+                               "edges)")
+        if not bool(done):
+            raise RuntimeError(
+                f"flow sim failed to converge ({inc.n_flows} flows)")
+        finish = np.asarray(finish)
+        edge_bytes = np.zeros(inc.n_edges)
+        edge_bytes[used] = np.asarray(used_bytes)
+        n_epochs = int(n_epochs)
+    return _finalize_result(inc, size, caps, start, finish, edge_bytes,
+                            n_epochs, net)
 
 
 def simulate_flows(router, flows: "list[FlowSpec]", mode: str = "minimal",
@@ -285,6 +431,12 @@ def simulate_flow_batches(router, batches: "list[list[FlowSpec]]",
     staggered starts inside a phase still work.  Because batches never
     overlap on the fabric, simulating them independently and accumulating
     the clock is exact.
+
+    Incidence extraction goes through the router's pair-level cache
+    (``incidence_cached``): a schedule that reuses (src, dst) pairs
+    across phases — every collective does — only walks each pair once,
+    instead of re-extracting the full batch every phase
+    (``router.incidence_calls`` counts the actual engine walks).
     """
     if rate_cap_gbps is None:
         rate_cap_gbps = router.topo.port_gbps if hasattr(router, "topo") \
@@ -298,7 +450,7 @@ def simulate_flow_batches(router, batches: "list[list[FlowSpec]]",
             results.append(None)
             continue
         dem = flows_to_demands(flows)
-        inc = flow_incidence(router, dem, mode)
+        inc = flow_incidence(router, dem, mode, cached=True)
         res = simulate_incidence(
             inc, np.array([f.size_bytes for f in flows]),
             rate_cap_gbps,

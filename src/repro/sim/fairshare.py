@@ -11,22 +11,39 @@ analytic engines' load accounting by construction (pinned to 1e-6 by
 Fair shares come from classic progressive water-filling: all unfrozen
 flows raise their rate at the same pace until an edge saturates (freezing
 every flow crossing it) or a flow hits its demand cap, repeated until all
-flows freeze.  Each round is a handful of scatter-adds over the COO
-entries — ``numpy`` or ``jax.numpy`` backend, the same
-:func:`~repro.core.routing_vec.get_backend` contract as the routing
-engines (``auto`` picks jax only under x64, preserving the equivalence
-tolerances).
+flows freeze.  Three solver paths compute the identical fixpoint:
 
-All rates and capacities are Gbps; ``frac`` is dimensionless.
+``numpy``   the reference: a Python round loop of ``np.bincount``
+            scatter-adds — the pre-jit solver the golden fixtures pin
+            (``tests/golden/fairshare_golden.json``).
+``jax``     the whole solve as ONE jitted ``lax.while_loop`` over sparse
+            COO segment ops (``jax.ops.segment_sum``) — no Python
+            round-trip per round, float64 via a ``jax.experimental
+            .enable_x64`` scope regardless of the global flag.  This is
+            the 65K-NIC path (``results/BENCH_sim_scale.json``).
+``pallas``  the same while_loop with the segment reductions lowered to
+            the Pallas one-hot contraction kernels
+            (:mod:`repro.kernels.segment_fairshare`), interpreter-mode
+            on CPU (the ref fallback), compiled on real TPUs.
+``auto``    jax when 64-bit mode is on (the
+            :func:`~repro.core.routing_vec.get_backend` contract),
+            numpy otherwise.
+
+All paths agree to 1e-9 (``tests/test_fairshare_props.py`` /
+``tests/test_fairshare_golden.py``).  All rates and capacities are Gbps;
+``frac`` is dimensionless.
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.routing_vec import DemandArrays, _scatter_add, get_backend
+
+FAIRSHARE_BACKENDS = ("numpy", "jax", "pallas", "auto")
 
 
 @dataclass
@@ -49,6 +66,10 @@ class FlowIncidence:
     @property
     def n_edges(self) -> int:
         return int(self.capacity.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.flow.shape[0])
 
     def loads(self, rates_gbps: np.ndarray) -> np.ndarray:
         """(E,) offered Gbps per edge when flow ``f`` runs at
@@ -91,15 +112,41 @@ class FlowIncidence:
 
 
 def flow_incidence(router, demands: DemandArrays,
-                   mode: str = "minimal") -> FlowIncidence:
+                   mode: str = "minimal",
+                   cached: bool = False) -> FlowIncidence:
     """Extract the per-flow incidence tensor from a batched router
     (:func:`repro.core.netsim.make_router` product: MPHX array engine or
     generic graph engine — both expose ``incidence`` and
-    ``edge_capacity``)."""
-    flow, edge, frac = router.incidence(demands, mode)
+    ``edge_capacity``).
+
+    ``cached=True`` routes the extraction through the router's pair-level
+    incidence cache (``incidence_cached``): only (src, dst) pairs not
+    seen before are walked, so repeated flow sets (collective phases,
+    epoch re-solves) skip the ~20x-route-cost extraction entirely.
+    """
+    if cached and hasattr(router, "incidence_cached"):
+        flow, edge, frac = router.incidence_cached(demands, mode)
+    else:
+        flow, edge, frac = router.incidence(demands, mode)
     return FlowIncidence(flow, edge, frac, demands.n,
                          np.asarray(router.edge_capacity(),
                                     dtype=np.float64))
+
+
+def resolve_sim_backend(backend: str = "numpy") -> str:
+    """Normalize a fair-share solver backend name (``auto`` follows the
+    router engines' :func:`get_backend` contract: jax only under x64)."""
+    if backend not in FAIRSHARE_BACKENDS:
+        raise ValueError(f"unknown fairshare backend {backend!r}; "
+                         f"expected one of {FAIRSHARE_BACKENDS}")
+    if backend == "auto":
+        return get_backend("auto")[0]       # "jax" under x64, else "numpy"
+    return backend
+
+
+def _waterfill_scale(inc: FlowIncidence, caps: np.ndarray) -> float:
+    return float(max(np.max(inc.capacity, initial=0.0),
+                     caps.max() if caps.size else 0.0, 1.0))
 
 
 def max_min_rates(inc: FlowIncidence, rate_caps_gbps: np.ndarray,
@@ -112,10 +159,10 @@ def max_min_rates(inc: FlowIncidence, rate_caps_gbps: np.ndarray,
     freeze) or the flow reaches its own ``rate_caps_gbps`` demand cap.
     Inactive flows hold rate 0 and consume nothing.  Terminates in at most
     F + E rounds (each round freezes a flow or saturates an edge); rounds
-    are O(NNZ) scatter-adds on the selected backend.
+    are O(NNZ) segment reductions on the selected ``backend`` (see the
+    module docstring for the numpy/jax/pallas paths).
     """
-    _, xp = get_backend(backend)
-    F, E = inc.n_flows, inc.n_edges
+    F = inc.n_flows
     caps = np.broadcast_to(np.asarray(rate_caps_gbps, dtype=np.float64),
                            (F,))
     if not np.all(np.isfinite(caps)):
@@ -123,14 +170,43 @@ def max_min_rates(inc: FlowIncidence, rate_caps_gbps: np.ndarray,
                          "path would otherwise fill forever)")
     if active is None:
         active = np.ones(F, dtype=bool)
+    backend = resolve_sim_backend(backend)
+    if F == 0:
+        return np.zeros(0)
+    if backend == "numpy":
+        return _max_min_rates_reference(inc, caps, active)
+    tol = 1e-12 * _waterfill_scale(inc, caps)
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    used, edge_c, cap_c = _compress_edges(inc)
+    with enable_x64():
+        rates, converged = _waterfill_jit()(
+            jnp.asarray(inc.flow), jnp.asarray(edge_c),
+            jnp.asarray(inc.frac), jnp.asarray(cap_c),
+            jnp.asarray(caps), jnp.asarray(active), jnp.asarray(tol),
+            E=used.size, use_pallas=(backend == "pallas"))
+        if not bool(converged):
+            raise RuntimeError("water-filling failed to converge "
+                               f"({F} flows, {inc.n_edges} edges)")
+        return np.asarray(rates)
+
+
+# ---------------------------------------------------------------------------
+# Reference path (pre-jit solver — the golden fixtures pin this loop)
+# ---------------------------------------------------------------------------
+
+
+def _max_min_rates_reference(inc: FlowIncidence, caps: np.ndarray,
+                             active: np.ndarray) -> np.ndarray:
+    xp = np
+    F, E = inc.n_flows, inc.n_edges
     flow = xp.asarray(inc.flow)
     edge = xp.asarray(inc.edge)
     frac = xp.asarray(inc.frac)
     cap_e = xp.asarray(inc.capacity)
     caps_x = xp.asarray(caps)
-    scale = float(max(np.max(inc.capacity, initial=0.0),
-                      caps.max() if F else 0.0, 1.0))
-    tol = 1e-12 * scale
+    tol = 1e-12 * _waterfill_scale(inc, caps)
     rates = xp.zeros(F)
     unfrozen = xp.asarray(active.copy())
     cap_left = cap_e
@@ -157,3 +233,91 @@ def max_min_rates(inc: FlowIncidence, rate_caps_gbps: np.ndarray,
         raise RuntimeError("water-filling failed to converge "
                            f"({F} flows, {E} edges)")
     return np.asarray(rates)
+
+
+# ---------------------------------------------------------------------------
+# In-jit path: the whole solve as one lax.while_loop over segment ops
+# ---------------------------------------------------------------------------
+
+
+def _compress_edges(inc: FlowIncidence):
+    """Drop edges no flow crosses before solving.
+
+    An edge with zero incidence weight can never saturate (``wsum = 0``
+    keeps it out of ``open_e``), so it contributes nothing to any round's
+    ``delta`` — the solve over the used-edge subset runs the *identical*
+    float sequence.  Fabric edge sets are much larger than any one flow
+    set's footprint (a 65K-NIC fabric has ~72K directed edges; a
+    neighbor-shift flow set touches ~2 per flow), so this is the main
+    constant-factor win of the jit paths.  Returns ``(used_edge_ids,
+    remapped_edge_col, used_capacities)``.
+    """
+    used, edge_c = np.unique(inc.edge, return_inverse=True)
+    return used, edge_c.astype(np.int64), inc.capacity[used]
+
+
+def _segment_sum(vals, ids, n_segments: int, use_pallas: bool):
+    """Backend-selected COO scatter-add (traced inside jit)."""
+    if use_pallas:
+        from repro.kernels.segment_fairshare import segment_sum
+
+        return segment_sum(vals, ids, n_segments)
+    import jax
+
+    return jax.ops.segment_sum(vals, ids, num_segments=n_segments)
+
+
+def _waterfill_body(flow, edge, frac, cap_e, caps, tol, E: int,
+                    use_pallas: bool):
+    """(cond, body, init-builder) of the water-filling while_loop —
+    shared by the standalone solver and the in-jit event loop."""
+    import jax.numpy as jnp
+
+    F = caps.shape[0]
+
+    def cond(state):
+        _, unfrozen, _, i = state
+        return jnp.logical_and(unfrozen.any(), i < F + E + 2)
+
+    def body(state):
+        rates, unfrozen, cap_left, i = state
+        live = jnp.where(unfrozen[flow], frac, 0.0)
+        wsum = _segment_sum(live, edge, E, use_pallas)
+        open_e = wsum > tol
+        delta_e = jnp.where(open_e,
+                            cap_left / jnp.where(open_e, wsum, 1.0),
+                            jnp.inf)
+        delta_f = jnp.where(unfrozen, caps - rates, jnp.inf)
+        d_edges = delta_e.min() if E else jnp.inf
+        delta = jnp.maximum(jnp.minimum(d_edges, delta_f.min()), 0.0)
+        rates = jnp.where(unfrozen, rates + delta, rates)
+        cap_left = cap_left - delta * wsum
+        sat = open_e & (cap_left <= tol)
+        on_sat = _segment_sum(jnp.where(sat[edge], frac, 0.0), flow, F,
+                              use_pallas) > 0
+        capped = rates >= caps - tol
+        return rates, unfrozen & ~on_sat & ~capped, cap_left, i + 1
+
+    def init(active):
+        return (jnp.zeros(F, dtype=caps.dtype), active, cap_e,
+                jnp.int32(0))
+
+    return cond, body, init
+
+
+@functools.lru_cache(maxsize=1)
+def _waterfill_jit():
+    """Build (once) the jitted standalone solve: ``(rates, converged)``."""
+    import jax
+    import jax.numpy as jnp
+
+    @functools.partial(jax.jit, static_argnames=("E", "use_pallas"))
+    def solve(flow, edge, frac, cap_e, caps, active, tol, *,
+              E: int, use_pallas: bool):
+        cond, body, init = _waterfill_body(flow, edge, frac, cap_e, caps,
+                                           tol, E, use_pallas)
+        rates, unfrozen, _, _ = jax.lax.while_loop(cond, body,
+                                                   init(active))
+        return rates, jnp.logical_not(unfrozen.any())
+
+    return solve
