@@ -1,0 +1,283 @@
+"""Perf-regression dashboard over the committed ``results/BENCH_*.json``.
+
+Consolidates every benchmark artifact into one metric set (wall-clock
+``time`` metrics, ``speedup`` ratios, boolean ``flag`` gates), keeps a
+bounded snapshot history in ``results/BENCH_report.json``, and renders a
+delta table to ``results/BENCH_report.md``.
+
+Modes::
+
+    python benchmarks/report.py                  # append snapshot + md
+    python benchmarks/report.py --check          # read-only CI gate
+
+``--check`` exits nonzero when any flag is falsy, any time metric is
+more than ``--threshold`` (default 1.5x) slower than the baseline
+snapshot, or any speedup metric dropped below ``base / threshold``.
+The baseline is the last snapshot in the history (or ``--baseline``).
+
+Write mode also deletes the stale ``results/bench_results.csv`` left by
+older ``benchmarks/run.py`` revisions — the history JSON supersedes it.
+
+Pure stdlib; no PYTHONPATH needed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+HISTORY_SCHEMA = 1
+MAX_SNAPSHOTS = 20
+DEFAULT_THRESHOLD = 1.5
+STALE_CSV = "bench_results.csv"
+
+# wall-clock keys (lower is better); simulated-time results such as
+# fct_p50_us or closed_form_s are deterministic outputs, not perf
+# metrics, and are deliberately NOT matched
+_TIME_KEYS = {"route_s", "incidence_s", "vectorized_s", "legacy_s",
+              "demand_build_vec_s", "demand_build_legacy_s",
+              "sim_wall_s"}
+
+
+def _is_flag_key(key: str) -> bool:
+    """Assertion-style booleans only — informational booleans such as
+    sim_scale's ``reference_timed`` are not pass/fail gates."""
+    return (key in ("meets_target", "ok", "passed")
+            or key.startswith("within_") or key.startswith("matches_")
+            or key.endswith("_match") or key.endswith("_agree")
+            or key.endswith("_ok"))
+
+
+def _is_time_key(key: str) -> bool:
+    return key in _TIME_KEYS or key == "wall_s" \
+        or key.endswith("_wall_s") or key.endswith("_engine_s")
+
+
+def _is_speedup_key(key: str) -> bool:
+    return key == "speedup" or key.startswith("speedup_")
+
+
+def _element_id(item: dict, index: int) -> str:
+    for k in ("preset", "topology", "name", "label", "arch"):
+        v = item.get(k)
+        if isinstance(v, str) and v:
+            return v
+    return str(index)
+
+
+def _walk(node, path: str, out: dict) -> None:
+    if isinstance(node, dict):
+        for k, v in node.items():
+            sub = f"{path}.{k}" if path else k
+            if isinstance(v, bool):
+                if _is_flag_key(k):
+                    out[sub] = {"kind": "flag", "value": v}
+            elif isinstance(v, (int, float)) and _is_speedup_key(k):
+                out[sub] = {"kind": "speedup", "value": float(v)}
+            elif isinstance(v, (int, float)) and _is_time_key(k):
+                out[sub] = {"kind": "time", "value": float(v)}
+            elif isinstance(v, dict) and _is_time_key(k):
+                # e.g. sim_scale "wall_s": {"numpy": ..., "jax": ...}
+                for bk, bv in v.items():
+                    if isinstance(bv, (int, float)) \
+                            and not isinstance(bv, bool):
+                        out[f"{sub}.{bk}"] = {"kind": "time",
+                                              "value": float(bv)}
+            elif isinstance(v, (dict, list)):
+                _walk(v, sub, out)
+    elif isinstance(node, list):
+        for i, item in enumerate(node):
+            if isinstance(item, dict):
+                _walk(item, f"{path}[{_element_id(item, i)}]", out)
+            # scalar lists (rep timings) are raw samples, not metrics
+
+
+def extract_metrics(payload: dict) -> dict:
+    """Flatten one BENCH payload into ``{metric: {kind, value}}``."""
+    bench = payload.get("bench", "unknown")
+    out: dict = {}
+    _walk(payload, bench, out)
+    return out
+
+
+def collect(results_dir: str) -> dict:
+    """Metrics from every ``BENCH_*.json`` in ``results_dir``."""
+    metrics: dict = {}
+    for path in sorted(glob.glob(os.path.join(results_dir,
+                                              "BENCH_*.json"))):
+        if os.path.basename(path) == "BENCH_report.json":
+            continue
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"report: skipping unreadable {path}: {e}",
+                  file=sys.stderr)
+            continue
+        metrics.update(extract_metrics(payload))
+    return metrics
+
+
+def _git_label() -> str:
+    try:
+        rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        if rev.returncode == 0 and rev.stdout.strip():
+            return rev.stdout.strip()
+    except OSError:
+        pass
+    return "local"
+
+
+def load_history(path: str) -> dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            hist = json.load(f)
+        if hist.get("schema_version") == HISTORY_SCHEMA \
+                and isinstance(hist.get("snapshots"), list):
+            return hist
+        print(f"report: discarding incompatible history at {path}",
+              file=sys.stderr)
+    return {"schema_version": HISTORY_SCHEMA, "snapshots": []}
+
+
+def baseline_metrics(hist: dict) -> "dict | None":
+    snaps = hist.get("snapshots", [])
+    return snaps[-1]["metrics"] if snaps else None
+
+
+def compare(current: dict, base: "dict | None",
+            threshold: float) -> "list[dict]":
+    """Per-metric verdicts; ``ok=False`` rows are regressions."""
+    rows = []
+    for name in sorted(current):
+        cur = current[name]
+        row = {"metric": name, "kind": cur["kind"],
+               "value": cur["value"], "base": None, "ratio": None,
+               "ok": True, "why": ""}
+        b = base.get(name) if base else None
+        if b is not None and b.get("kind") == cur["kind"]:
+            row["base"] = b["value"]
+        if cur["kind"] == "flag":
+            if not cur["value"]:
+                row["ok"] = False
+                row["why"] = "flag is false"
+        elif row["base"] is not None and row["base"] > 0:
+            row["ratio"] = cur["value"] / row["base"]
+            if cur["kind"] == "time" and row["ratio"] > threshold:
+                row["ok"] = False
+                row["why"] = (f"{row['ratio']:.2f}x slower than "
+                              f"baseline (threshold {threshold:g}x)")
+            elif cur["kind"] == "speedup" \
+                    and row["ratio"] < 1.0 / threshold:
+                row["ok"] = False
+                row["why"] = (f"speedup fell to {row['ratio']:.2f}x of "
+                              f"baseline (threshold "
+                              f"1/{threshold:g})")
+        rows.append(row)
+    return rows
+
+
+def render_markdown(rows: "list[dict]", hist: dict,
+                    threshold: float) -> str:
+    lines = ["# Benchmark regression report", "",
+             f"Metrics: {len(rows)} "
+             f"({sum(1 for r in rows if not r['ok'])} regressions, "
+             f"threshold {threshold:g}x). Baseline: last snapshot in "
+             "`results/BENCH_report.json`.", "",
+             "| metric | kind | baseline | current | ratio | status |",
+             "| --- | --- | --- | --- | --- | --- |"]
+    for r in rows:
+        def fmt(v):
+            if v is None:
+                return "—"
+            if isinstance(v, bool):
+                return "yes" if v else "no"
+            return f"{v:.6g}"
+        status = "ok" if r["ok"] else f"**FAIL** ({r['why']})"
+        lines.append(f"| {r['metric']} | {r['kind']} | {fmt(r['base'])} "
+                     f"| {fmt(r['value'])} | {fmt(r['ratio'])} "
+                     f"| {status} |")
+    lines += ["", "## History", ""]
+    for snap in hist.get("snapshots", []):
+        lines.append(f"- `{snap['label']}` — "
+                     f"{len(snap['metrics'])} metrics")
+    return "\n".join(lines) + "\n"
+
+
+def run_check(current: dict, base: "dict | None",
+              threshold: float) -> int:
+    if not current:
+        print("report: no BENCH_*.json metrics found", file=sys.stderr)
+        return 1
+    rows = compare(current, base, threshold)
+    bad = [r for r in rows if not r["ok"]]
+    for r in bad:
+        print(f"REGRESSION {r['metric']}: {r['why']} "
+              f"(base={r['base']}, current={r['value']})",
+              file=sys.stderr)
+    n_base = sum(1 for r in rows if r["base"] is not None)
+    print(f"report --check: {len(rows)} metrics, {n_base} compared "
+          f"against baseline, {len(bad)} regressions")
+    return 1 if bad else 0
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python benchmarks/report.py", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("--results-dir", default="results",
+                   help="directory holding BENCH_*.json (default "
+                   "results)")
+    p.add_argument("--check", action="store_true",
+                   help="read-only gate: exit 1 on regressions vs the "
+                   "baseline snapshot; writes nothing")
+    p.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                   help=f"slowdown ratio that fails --check (default "
+                   f"{DEFAULT_THRESHOLD})")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help="history JSON to compare against (default "
+                   "<results-dir>/BENCH_report.json)")
+    p.add_argument("--label", default=None,
+                   help="snapshot label (default: git short rev)")
+    args = p.parse_args(argv)
+
+    hist_path = args.baseline or os.path.join(args.results_dir,
+                                              "BENCH_report.json")
+    current = collect(args.results_dir)
+    hist = load_history(hist_path)
+    base = baseline_metrics(hist)
+
+    if args.check:
+        return run_check(current, base, args.threshold)
+
+    if not current:
+        print("report: no BENCH_*.json metrics found", file=sys.stderr)
+        return 1
+    snap = {"label": args.label or _git_label(), "metrics": current}
+    hist["snapshots"] = (hist["snapshots"] + [snap])[-MAX_SNAPSHOTS:]
+    out_json = os.path.join(args.results_dir, "BENCH_report.json")
+    with open(out_json, "w") as f:
+        json.dump(hist, f, indent=2)
+        f.write("\n")
+    rows = compare(current, base, args.threshold)
+    out_md = os.path.join(args.results_dir, "BENCH_report.md")
+    with open(out_md, "w") as f:
+        f.write(render_markdown(rows, hist, args.threshold))
+    stale = os.path.join(args.results_dir, STALE_CSV)
+    if os.path.exists(stale):
+        os.remove(stale)
+        print(f"report: removed stale {stale} (superseded by "
+              f"{out_json})")
+    bad = sum(1 for r in rows if not r["ok"])
+    print(f"report: {len(current)} metrics -> {out_json}, {out_md} "
+          f"({bad} regressions flagged)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

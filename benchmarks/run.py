@@ -749,18 +749,46 @@ BENCHES = {
 }
 
 
-def main() -> None:
-    which = sys.argv[1:] or list(BENCHES)
-    print("name,us_per_call,derived")
-    for name in which:
-        BENCHES[name]()
-    out = os.path.join(os.path.dirname(__file__), "..", "results")
-    os.makedirs(out, exist_ok=True)
-    with open(os.path.join(out, "bench_results.csv"), "w") as f:
-        f.write("name,us_per_call,derived\n")
-        for n, us, d in ROWS:
-            f.write(f"{n},{us:.3f},{d}\n")
+def main(argv: "list[str] | None" = None) -> int:
+    import argparse
+    from contextlib import nullcontext
+
+    p = argparse.ArgumentParser(
+        prog="benchmarks/run.py",
+        description="paper-table / framework benches; BENCH_*.json "
+                    "artifacts are consolidated by benchmarks/report.py")
+    p.add_argument("benches", nargs="*", metavar="BENCH",
+                   help=f"benches to run (default all): {' '.join(BENCHES)}")
+    p.add_argument("--trace", default=None, metavar="OUT.json",
+                   help="run under the fabric flight recorder and export "
+                   "a Chrome/Perfetto trace_event JSON; benches whose "
+                   "path never crosses the simulator leave explicit "
+                   "skip records (docs/observability.md)")
+    args = p.parse_args(argv)
+    which = args.benches or list(BENCHES)
+    unknown = [n for n in which if n not in BENCHES]
+    if unknown:
+        p.error(f"unknown bench(es) {unknown}; known: {' '.join(BENCHES)}")
+    rec, ctx = None, nullcontext()
+    if args.trace:
+        from repro.telemetry import TraceRecorder, recording
+        rec = TraceRecorder()
+        ctx = recording(rec)
+    with ctx:
+        print("name,us_per_call,derived")
+        for name in which:
+            n0 = rec.n_events if rec else 0
+            BENCHES[name]()
+            if rec is not None and rec.n_events == n0:
+                rec.note_skip(f"bench:{name}",
+                              "bench path crossed no traced layer "
+                              "(analytic/closed-form only)")
+    if rec is not None:
+        rec.export(args.trace)
+        print(f"trace: {rec.n_events} events, {len(rec.notes)} untraced "
+              f"benches -> {args.trace}", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -23,6 +23,13 @@ else
     python -m pytest -x -q "$@"
 fi
 
+if [[ "${SKIP_BENCH_CHECK:-0}" != "1" ]]; then
+    # perf-regression gate: the committed BENCH_*.json snapshots must
+    # not regress vs the committed history (benchmarks/report.py);
+    # runs before any smoke regenerates a BENCH artifact
+    python benchmarks/report.py --check
+fi
+
 if [[ "${SKIP_JAX_LANE:-0}" != "1" ]]; then
     # jax-backend lane: the in-jit water-filling/event-loop paths and
     # the Pallas segment kernels, pinned to the CPU backend so the lane
@@ -64,6 +71,7 @@ if [[ "${SKIP_COSIM_SMOKE:-0}" != "1" ]]; then
     COSIM_SMOKE_OUT="$(mktemp -d)"
     python -m repro.experiments.run --suite cosim \
         --config mixtral_8x22b --ranks 16 --topos mphx-2p-8x8 \
-        --out "$COSIM_SMOKE_OUT"
+        --out "$COSIM_SMOKE_OUT" \
+        --trace "$COSIM_SMOKE_OUT/trace.json"
     rm -rf "$COSIM_SMOKE_OUT"
 fi

@@ -24,6 +24,7 @@ DEFAULT_DOCS = [
     os.path.join("docs", "experiments.md"),
     os.path.join("docs", "simulation.md"),
     os.path.join("docs", "cosim.md"),
+    os.path.join("docs", "observability.md"),
 ]
 
 

@@ -177,7 +177,6 @@ class GraphRouter(IncidenceCacheMixin):
             dst_chunk = max(1, int(8e6 // max(self.csr.n_edges, 1)))
         self.dst_chunk = dst_chunk
         self._hops: "np.ndarray | None" = None
-        self.incidence_calls = 0
 
     @property
     def hops(self) -> np.ndarray:
@@ -253,7 +252,7 @@ class GraphRouter(IncidenceCacheMixin):
                 f"no static per-flow incidence for graph-engine mode "
                 f"{mode!r} (valiant averages over all intermediates, "
                 "adaptive re-routes under load); use minimal")
-        self.incidence_calls += 1
+        self._count_walk()
         src = np.asarray(demands.src, dtype=np.int64)
         dst = np.asarray(demands.dst, dtype=np.int64)
         keep = np.flatnonzero(src != dst)

@@ -369,14 +369,58 @@ class IncidenceCacheMixin:
     re-solves reuse the whole flow set); routing them through
     :meth:`incidence_cached` only walks pairs never seen before.
 
-    ``incidence_calls`` counts *engine walks* (full :meth:`incidence`
-    extractions) — the hook ``tests/test_sim_scale.py`` uses to assert
-    re-solves stop re-extracting.  Invalidate with
-    :meth:`reset_incidence_cache` after anything that changes routes
-    (e.g. failure masking builds a new router, which starts cold anyway).
+    Cache effectiveness is reported uniformly by both engines through a
+    per-router :class:`~repro.telemetry.MetricsRegistry`
+    (``router.metrics``): ``incidence.walks`` counts *engine walks* (full
+    :meth:`incidence` extractions — the hook ``tests/test_sim_scale.py``
+    uses to assert re-solves stop re-extracting), and
+    ``incidence.cache_hits`` / ``incidence.cache_misses`` count pairs
+    served from / added to the cache.  When an ambient registry is
+    collecting (:func:`repro.telemetry.collecting`), the same events are
+    mirrored there.  ``incidence_calls`` remains as a deprecated alias of
+    the walk counter.  Invalidate with :meth:`reset_incidence_cache`
+    after anything that changes routes (e.g. failure masking builds a new
+    router, which starts cold anyway).
     """
 
-    incidence_calls: int = 0
+    @property
+    def metrics(self):
+        """This router's private metrics registry (lazy)."""
+        m = getattr(self, "_metrics", None)
+        if m is None:
+            from ..telemetry import MetricsRegistry
+            m = self._metrics = MetricsRegistry()
+        return m
+
+    @metrics.setter
+    def metrics(self, registry) -> None:
+        self._metrics = registry
+
+    @property
+    def incidence_calls(self) -> int:
+        """Deprecated alias of ``metrics.value("incidence.walks")``."""
+        return int(self.metrics.value("incidence.walks"))
+
+    @incidence_calls.setter
+    def incidence_calls(self, value: int) -> None:
+        import warnings
+        warnings.warn(
+            "incidence_calls is deprecated; use "
+            "router.metrics.value('incidence.walks')",
+            DeprecationWarning, stacklevel=2)
+        self.metrics.set_counter("incidence.walks", int(value))
+
+    def _count_walk(self) -> None:
+        from ..telemetry import get_metrics
+        self.metrics.inc("incidence.walks")
+        get_metrics().inc("incidence.walks")
+
+    def _count_cache(self, hits: int, misses: int) -> None:
+        from ..telemetry import get_metrics
+        ambient = get_metrics()
+        for reg in (self.metrics, ambient):
+            reg.inc("incidence.cache_hits", hits)
+            reg.inc("incidence.cache_misses", misses)
 
     def _pair_cache(self, mode: str) -> dict:
         if not hasattr(self, "_inc_cache"):
@@ -397,6 +441,7 @@ class IncidenceCacheMixin:
                               return_inverse=True)
         pairs = [tuple(p) for p in uniq.tolist()]
         miss = [p for p in pairs if p not in cache]
+        self._count_cache(hits=len(pairs) - len(miss), misses=len(miss))
         if miss:
             ma = np.asarray(miss, dtype=np.int64)
             sub = DemandArrays(ma[:, 0], ma[:, 1], np.ones(ma.shape[0]))
@@ -426,7 +471,6 @@ class VectorizedHyperXRouter(IncidenceCacheMixin):
         self.topo = topo
         self.index = EdgeIndex(topo)
         self.backend, self.xp = get_backend(backend)
-        self.incidence_calls = 0
 
     # ------------------------------------------------------------ helpers ----
 
@@ -552,7 +596,7 @@ class VectorizedHyperXRouter(IncidenceCacheMixin):
         deroutes); ``adaptive`` re-routes under load and has no static
         incidence.
         """
-        self.incidence_calls += 1
+        self._count_walk()
         src, dst, gbps, cs, cd = self._prep(demands)
         n_full = math.factorial(self.index.D)
         flows, slots_l, fracs = [], [], []

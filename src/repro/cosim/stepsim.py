@@ -43,6 +43,7 @@ from repro.sim.events import (flows_to_demands, path_latency,
                               simulate_flow_batches)
 from repro.sim.fairshare import flow_incidence
 from repro.sim.spray import simulate_sprayed
+from repro.telemetry import get_metrics, get_recorder
 from .placement import mphx_rank_layout, phase_step_flows, rank_to_switch
 from .traffic import CollectivePhase, TrainJob, decompose_phase
 
@@ -209,14 +210,18 @@ def simulate_step(topo: Topology, job: TrainJob,
     t_acc = 0.0
     rows = []
     analytic_total = 0.0
+    rec = get_recorder()
+    proc = f"cosim:{topo.name}"
     for phase in phases:
         start = t_acc if stagger else 0.0
+        span_start = t_acc      # spans always tile the step clock
         flows, steps, senders = phase_step_flows(
             phase, switch_of, job.n_ranks, start_s=start)
         analytic = analytic_phase_time(topo, phase, net)
         analytic_total += analytic
         # a merged flow aggregates `senders` NIC ports of injection
         caps = topo.port_gbps * senders.astype(np.float64)
+        res = None
         if not flows:
             # all groups intra-switch: alpha-only schedule
             comm = phase.calls * steps * _alpha(topo, 2.0, net)
@@ -234,10 +239,28 @@ def simulate_step(topo: Topology, job: TrainJob,
                     f"phase {phase.name}: stalled flows on {topo.name}")
             comm = phase.calls * steps * (res.makespan_s
                                           + net.software_alpha)
+        if rec is not None:
+            # one span per phase on the step track — their durations sum
+            # to comm_s exactly (the trace IS the step breakdown)
+            rec.span(phase.name, span_start, comm, process=proc,
+                     thread="step", cat="phase",
+                     args={"kind": phase.kind, "group": phase.size,
+                           "calls": phase.calls, "steps": steps,
+                           "flows": len(flows), "analytic_s": analytic})
+            if res is not None:
+                # per-plane busy windows under the phase span
+                for k in range(res.plane_transfer_s.shape[1]):
+                    busy = float(res.plane_transfer_s[:, k].max())
+                    if busy > 0:
+                        rec.span(phase.name, span_start,
+                                 min(phase.calls * steps * busy, comm),
+                                 process=proc, thread=f"plane {k}",
+                                 cat="plane")
         rows.append(PhaseTime(phase.name, phase.kind, phase.size,
                               phase.calls, steps, len(flows), start,
                               comm, analytic))
         t_acc += comm
+    get_metrics().inc("cosim.phases", len(phases))
     comm_s = t_acc
     compute_s = (6.0 * job.active_params * job.tokens_per_step
                  / (job.n_ranks * device_tflops * 1e12))

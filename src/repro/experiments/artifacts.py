@@ -1,14 +1,15 @@
 """JSON + markdown artifact writers for experiment suites.
 
-Artifact schema (``schema_version`` 4):
+Artifact schema (``schema_version`` 5):
 
 ```json
 {
-  "schema_version": 4,
+  "schema_version": 5,
   "suite": "table2" | "sweep" | "sim" | "failures" | "cosim",
   "generated_by": "repro.experiments",
   "params": { ... suite parameters ... },
-  "rows": [ { ... flat record ... }, ... ]
+  "rows": [ { ... flat record ... }, ... ],
+  "telemetry": { "counters": ..., "gauges": ..., "timers": ... }
 }
 ```
 
@@ -18,6 +19,15 @@ table, for review in PRs).
 
 Schema history:
 
+* **v5** — optional top-level ``telemetry`` block: the ambient
+  :class:`repro.telemetry.MetricsRegistry` snapshot (operational
+  counters — engine walks, incidence-cache hit/miss, water-filling
+  rounds, event-loop epochs, re-spray events, re-route recomputes — plus
+  wall-time timers) captured when a suite runs inside a collecting scope
+  (``--trace`` or :func:`repro.telemetry.collecting`).  Absent when
+  telemetry is disabled, so v4 consumers are unaffected; all existing
+  suites' columns are unchanged.  ``failures`` recovery rows gain
+  measured ``phase_wall_s`` / ``t_offset_s`` columns.
 * **v4** — new ``cosim`` suite from the training-step co-simulator
   (``repro.cosim``): rows carry the (config, topology, engine,
   placement) cell plus measured ``comm_ms`` / ``compute_ms`` /
@@ -53,17 +63,22 @@ import json
 import os
 from typing import Sequence
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 
 def artifact_payload(suite: str, params: dict, rows: list[dict]) -> dict:
-    return {
+    payload = {
         "schema_version": SCHEMA_VERSION,
         "suite": suite,
         "generated_by": "repro.experiments",
         "params": params,
         "rows": rows,
     }
+    from repro.telemetry import get_metrics
+    mx = get_metrics()
+    if mx.enabled:
+        payload["telemetry"] = mx.snapshot()
+    return payload
 
 
 def write_json(path: str, payload: dict) -> str:

@@ -13,17 +13,25 @@ Examples::
     PYTHONPATH=src python -m repro.experiments.run --suite cosim \
         --config kimi_k2_1t_a32b --ranks 64
     PYTHONPATH=src python -m repro.experiments.run --suite all
+    PYTHONPATH=src python -m repro.experiments.run --suite cosim \
+        --topos mphx-2p-8x8 --trace step_trace.json
 
 Artifacts land in ``--out`` (default ``results/experiments``):
-``{table2,sweep,sim,failures,cosim}.{json,md}``; the JSON schema (v4) is
+``{table2,sweep,sim,failures,cosim}.{json,md}``; the JSON schema (v5) is
 documented in :mod:`repro.experiments.artifacts` and
-``docs/experiments.md`` / ``docs/simulation.md``.
+``docs/experiments.md`` / ``docs/simulation.md``.  ``--trace OUT.json``
+runs every selected suite under the fabric flight recorder
+(:mod:`repro.telemetry`) and exports one Chrome/Perfetto ``trace_event``
+JSON; suites with nothing to trace (analytic-only paths) leave explicit
+skip records in the trace's ``otherData.skipped``, and the artifacts
+gain the schema-v5 ``telemetry`` block.
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
+from contextlib import nullcontext
 
 from repro.sim.failures import parse_failure_spec
 from .cosuite import (DEFAULT_COSIM_CONFIGS, DEFAULT_COSIM_RANKS,
@@ -111,7 +119,18 @@ def build_parser() -> argparse.ArgumentParser:
                    default="steady",
                    help="cosim phase execution: steady-state step scaling "
                    "or the fully serialized batch schedule")
+    p.add_argument("--trace", default=None, metavar="OUT.json",
+                   help="run the suites under the fabric flight recorder "
+                   "and export a Chrome/Perfetto trace_event JSON "
+                   "(docs/observability.md); artifacts gain the "
+                   "schema-v5 telemetry block")
     return p
+
+
+def _note_if_untraced(rec, suite: str, n_before: int, reason: str) -> None:
+    """Explicit skip record when a suite path crossed no traced layer."""
+    if rec is not None and rec.n_events == n_before:
+        rec.note_skip(suite, reason)
 
 
 def main(argv: "list[str] | None" = None) -> int:
@@ -125,12 +144,33 @@ def main(argv: "list[str] | None" = None) -> int:
             return 2
     else:
         specs = None
+    rec, ctx = None, nullcontext()
+    if args.trace:
+        from repro.telemetry import TraceRecorder, recording
+        rec = TraceRecorder()
+        ctx = recording(rec)
+    with ctx:
+        rc = _run_suites(args, specs, rec)
+    if rec is not None:
+        rec.export(args.trace)
+        print(f"trace: {rec.n_events} events, "
+              f"{len(rec.notes)} untraced suites -> {args.trace}")
+    return rc
+
+
+def _run_suites(args, specs, rec=None) -> int:
+    rc = 0
     if args.suite in ("table2", "all"):
+        n0 = rec.n_events if rec else 0
         payload = run_table2_suite(args.out, args.collective_mb,
                                    args.msg_bytes)
         print(f"table2: {len(payload['rows'])} topologies -> "
               f"{args.out}/table2.json, {args.out}/table2.md")
+        _note_if_untraced(rec, "table2", n0,
+                          "analytic cost/diameter table — nothing "
+                          "crosses the simulator")
     if args.suite in ("sweep", "all"):
+        n0 = rec.n_events if rec else 0
         payload = run_sweep_suite(
             args.out, topo_names=args.topos, scenario_names=args.scenarios,
             modes=args.modes,
@@ -143,7 +183,11 @@ def main(argv: "list[str] | None" = None) -> int:
         print(f"sweep: {payload['params']['n_routed_rows']} routed rows, "
               f"{payload['params']['n_skipped']} skipped -> "
               f"{args.out}/sweep.json, {args.out}/sweep.md")
+        _note_if_untraced(rec, "sweep", n0,
+                          "analytic routing sweep without --simulate — "
+                          "nothing crosses the simulator")
     if args.suite in ("sim", "all"):
+        n0 = rec.n_events if rec else 0
         payload = run_sim_suite(
             args.out, topo_names=args.topos, scenario_names=args.scenarios,
             load_fractions=tuple(args.loads) if args.loads else (0.5, 0.9),
@@ -162,7 +206,11 @@ def main(argv: "list[str] | None" = None) -> int:
             print("sim: FAIL — simulator steady-state loads diverge from "
                   "the analytic engine (>1e-6)", file=sys.stderr)
             rc = 1
+        _note_if_untraced(rec, "sim", n0,
+                          "suite produced no trace events (all cells "
+                          "skipped)")
     if args.suite in ("cosim", "all"):
+        n0 = rec.n_events if rec else 0
         # the sim suites interpret --topos as sweep topologies; the cosim
         # default trims to fabrics big enough for the default job
         cosim_topos = args.topos if args.topos else list(DEFAULT_COSIM_TOPOS)
@@ -174,7 +222,11 @@ def main(argv: "list[str] | None" = None) -> int:
         print(f"cosim: {payload['params']['n_rows']} cells, "
               f"{payload['params']['n_skipped']} skipped -> "
               f"{args.out}/cosim.json, {args.out}/cosim.md")
+        _note_if_untraced(rec, "cosim", n0,
+                          "suite produced no trace events (all cells "
+                          "skipped)")
     if args.suite in ("failures", "all"):
+        n0 = rec.n_events if rec else 0
         payload = run_failures_suite(
             args.out, topo_names=args.topos,
             scenario_names=args.scenarios, failure_specs=specs,
@@ -183,6 +235,9 @@ def main(argv: "list[str] | None" = None) -> int:
         print(f"failures: {payload['params']['n_rows']} rows, "
               f"{payload['params']['n_skipped']} skipped -> "
               f"{args.out}/failures.json, {args.out}/failures.md")
+        _note_if_untraced(rec, "failures", n0,
+                          "suite produced no trace events (all cells "
+                          "skipped)")
     return rc
 
 

@@ -275,9 +275,11 @@ def run_failures_suite(outdir: str = DEFAULT_OUTDIR,
                 try:
                     ft = failure_throughput(topo, build, spec, offered,
                                             mode=mode, backend=backend)
+                    ft_wall = time.perf_counter() - t0
                     phases = recovery_curve(topo, build, spec, offered,
                                             mode=mode, backend=backend,
-                                            throughput_row=ft)
+                                            throughput_row=ft,
+                                            reroute_wall_s=ft_wall)
                 except ValueError as e:
                     # survivors disconnected: an explicit skip record
                     # (no silent drops), flagged so it lands in the
@@ -325,7 +327,7 @@ def run_failures_suite(outdir: str = DEFAULT_OUTDIR,
                          if r.get("kind") == "recovery"],
                         ["topology", "failures", "scenario", "phase",
                          "delivered_fraction", "stalled_share",
-                         "max_util"])),
+                         "max_util", "t_offset_s", "phase_wall_s"])),
     ]
     skipped = [r for r in rows if r.get("skipped")]
     if skipped:

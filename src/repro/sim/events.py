@@ -20,12 +20,14 @@ uncontended flow's FCT is exactly the closed-form
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.netsim import DEFAULT_NET, NetParams, gbps_to_Bps
 from repro.core.routing_vec import DemandArrays
+from repro.telemetry import get_metrics, get_recorder
 from .fairshare import (FlowIncidence, _segment_sum, _waterfill_body,
                         _waterfill_scale, flow_incidence, max_min_rates,
                         resolve_sim_backend)
@@ -110,6 +112,20 @@ def path_latency(inc: FlowIncidence, net: NetParams = DEFAULT_NET
             + (sw + 2.0) * net.t_prop_per_hop)
 
 
+def _journal_util(inc: FlowIncidence, rates_act: np.ndarray,
+                  sel: np.ndarray) -> np.ndarray:
+    """(K,) utilization of the selected global edges at the epoch's
+    active-flow rates (the numpy-loop side of the epoch journal — the jit
+    loop computes the same quantity over compressed edges)."""
+    if sel.size == 0:
+        return np.zeros(0)
+    loads = np.zeros(inc.n_edges)
+    np.add.at(loads, inc.edge, rates_act[inc.flow] * inc.frac)
+    cap = inc.capacity
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return np.where(cap[sel] > 0, loads[sel] / cap[sel], 0.0)
+
+
 def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
                        start_s=None, net: NetParams = DEFAULT_NET,
                        backend: str = "numpy") -> FlowSimResult:
@@ -126,6 +142,15 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
     water-filling — as one jitted ``lax.while_loop``, so a simulation is
     a single device call instead of a Python round-trip per re-solve
     (semantics pinned to the numpy loop at 1e-9 by the golden fixtures).
+
+    When a flight recorder is active (:func:`repro.telemetry.recording`)
+    both engines additionally journal one row per epoch — epoch clock,
+    active-flow count, utilization of the recorder's selected link subset
+    — with identical row count and ordering, plus per-flow transfer
+    spans.  With no recorder the numpy loop skips the journal code
+    entirely and the jitted loop compiles the exact pre-telemetry graph
+    (``record`` is a static argument), so disabled telemetry cannot
+    perturb the golden float sequences.
     """
     F = inc.n_flows
     size = np.broadcast_to(np.asarray(size_bytes, dtype=np.float64),
@@ -138,9 +163,45 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
     if np.any(size < 0) or np.any(caps <= 0):
         raise ValueError("sizes must be >= 0 and rate caps > 0")
     backend = resolve_sim_backend(backend)
+    rec = get_recorder()
+    mx = get_metrics()
+    t0_wall = time.perf_counter()
     if backend != "numpy" and F > 0:
-        return _simulate_incidence_jit(inc, size, caps, start, net,
-                                       use_pallas=(backend == "pallas"))
+        res = _simulate_incidence_jit(inc, size, caps, start, net,
+                                      use_pallas=(backend == "pallas"),
+                                      recorder=rec)
+    else:
+        res = _simulate_incidence_numpy(inc, size, caps, start, net,
+                                        backend, recorder=rec)
+    mx.inc("sim.runs")
+    mx.inc("sim.flows", F)
+    mx.inc("sim.epochs", res.n_epochs)
+    mx.observe("sim.wall_s", time.perf_counter() - t0_wall)
+    if rec is not None:
+        rec.record_flow_sim(res)
+    return res
+
+
+def _simulate_incidence_numpy(inc: FlowIncidence, size, caps, start,
+                              net: NetParams, backend: str,
+                              recorder=None) -> FlowSimResult:
+    F = inc.n_flows
+    record = recorder is not None and recorder.link_policy is not None
+    if record:
+        sel = recorder.link_policy.select(inc, caps)
+        max_j = recorder.link_policy.max_epochs
+        j_t, j_dt, j_act, j_util = [], [], [], []
+        dropped = 0
+
+        def journal(t, dt, act_mask, rates_act):
+            nonlocal dropped
+            if len(j_t) >= max_j:
+                dropped += 1
+                return
+            j_t.append(t)
+            j_dt.append(dt)
+            j_act.append(int(act_mask.sum()))
+            j_util.append(_journal_util(inc, rates_act, sel))
     remaining = size.copy()
     finish = np.full(F, np.inf)
     finish[size == 0] = start[size == 0]
@@ -168,11 +229,15 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
             stalled |= dead
             active &= ~dead
             if not active.any():
+                if record:
+                    journal(t, 0.0, active, np.zeros(F))
                 continue
         Bps = gbps_to_Bps(rates[active])
         dt_fin = float((remaining[active] / np.maximum(Bps, 1e-30)).min())
         dt_arr = float(pending.min() - t) if pending.size else np.inf
         dt = min(dt_fin, dt_arr)
+        if record:
+            journal(t, dt, active, np.where(active, rates, 0.0))
         moved = gbps_to_Bps(rates) * dt
         remaining = np.maximum(remaining - moved, 0.0)
         np.add.at(edge_bytes, inc.edge,
@@ -182,6 +247,11 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
         finish[just_done] = t
     else:
         raise RuntimeError(f"flow sim failed to converge ({F} flows)")
+    if record:
+        recorder.record_epoch_journal(
+            j_t, j_dt, j_act, sel,
+            np.asarray(j_util).reshape(len(j_t), sel.size),
+            dropped=dropped)
     return _finalize_result(inc, size, caps, start, finish, edge_bytes,
                             n_epochs, net)
 
@@ -210,13 +280,24 @@ def _event_loop_jit():
     while_loop (:func:`repro.sim.fairshare._waterfill_body`), advance to
     the next start/finish event.  Same constants, same branch structure,
     same freeze tolerances — the golden fixtures hold it to 1e-9.
+
+    ``record`` (static) threads the flight-recorder epoch journal —
+    per-epoch clock/dt/active-count plus utilization of the ``sel``
+    compressed-edge subset, written into fixed ``max_j``-row arrays with
+    masked writes (rows past ``max_j`` are counted, not written, matching
+    the reference loop's journal cap).  With ``record=False`` the journal
+    keys never enter the loop state, so the compiled graph is exactly the
+    pre-telemetry one.
     """
     import jax
     import jax.numpy as jnp
 
-    @functools.partial(jax.jit, static_argnames=("E", "use_pallas"))
-    def run(flow, edge, frac, cap_e, size, caps, start, tol, *,
-            E: int, use_pallas: bool):
+    @functools.partial(jax.jit,
+                       static_argnames=("E", "use_pallas", "record",
+                                        "max_j"))
+    def run(flow, edge, frac, cap_e, size, caps, start, tol, sel=None, *,
+            E: int, use_pallas: bool, record: bool = False,
+            max_j: int = 0):
         F = size.shape[0]
         eps = 1e-9
         thresh = eps * jnp.maximum(size, 1.0)
@@ -259,17 +340,37 @@ def _event_loop_jit():
                 dt_arr = jnp.where(has_pending, pending_min - t, jnp.inf)
                 dt = jnp.where(proceed,
                                jnp.minimum(per_dt.min(), dt_arr), 0.0)
+                # dt=0 when everything active just stalled — the
+                # reference loop's stall-continue epoch
                 moved = Bps * dt
                 remaining = jnp.maximum(s["remaining"] - moved, 0.0)
                 t2 = t + dt
                 just_done = act & (remaining <= thresh)
-                return dict(
+                s2 = dict(
                     s, t=t2, remaining=remaining,
                     finish=jnp.where(just_done, t2, s["finish"]),
                     stalled=s["stalled"] | stall_set,
                     edge_bytes=s["edge_bytes"] + _segment_sum(
                         moved[flow] * frac, edge, E, use_pallas),
                     n_epochs=s["n_epochs"] + 1, ok=s["ok"] & conv)
+                if record:
+                    idx = jnp.minimum(s["n_epochs"], max_j - 1)
+                    okr = s["n_epochs"] < max_j
+                    loads = _segment_sum(
+                        jnp.where(act, rates, 0.0)[flow] * frac, edge,
+                        E, use_pallas)
+                    util = jnp.where(cap_e[sel] > 0,
+                                     loads[sel] / cap_e[sel], 0.0)
+                    s2["j_t"] = s["j_t"].at[idx].set(
+                        jnp.where(okr, t, s["j_t"][idx]))
+                    s2["j_dt"] = s["j_dt"].at[idx].set(
+                        jnp.where(okr, dt, s["j_dt"][idx]))
+                    s2["j_act"] = s["j_act"].at[idx].set(
+                        jnp.where(okr, act.sum().astype(jnp.int32),
+                                  s["j_act"][idx]))
+                    s2["j_util"] = s["j_util"].at[idx].set(
+                        jnp.where(okr, util, s["j_util"][idx]))
+                return s2
 
             s2 = jax.lax.cond(active.any(), with_active, no_active, s)
             return dict(s2, i=s["i"] + 1)
@@ -285,16 +386,29 @@ def _event_loop_jit():
             "done": jnp.bool_(False),
             "ok": jnp.bool_(True),
         }
+        if record:
+            state["j_t"] = jnp.zeros(max_j, dtype=size.dtype)
+            state["j_dt"] = jnp.zeros(max_j, dtype=size.dtype)
+            state["j_act"] = jnp.zeros(max_j, dtype=jnp.int32)
+            state["j_util"] = jnp.zeros((max_j, sel.shape[0]),
+                                        dtype=size.dtype)
         out = jax.lax.while_loop(cond, body, state)
-        return (out["finish"], out["edge_bytes"], out["n_epochs"],
+        base = (out["finish"], out["edge_bytes"], out["n_epochs"],
                 out["done"], out["ok"])
+        if record:
+            return base + (out["j_t"], out["j_dt"], out["j_act"],
+                           out["j_util"])
+        return base
 
     return run
 
 
+_JIT_SEEN: set = set()
+
+
 def _simulate_incidence_jit(inc: FlowIncidence, size, caps, start,
-                            net: NetParams, use_pallas: bool
-                            ) -> FlowSimResult:
+                            net: NetParams, use_pallas: bool,
+                            recorder=None) -> FlowSimResult:
     import jax.numpy as jnp
     from jax.experimental import enable_x64
 
@@ -304,12 +418,32 @@ def _simulate_incidence_jit(inc: FlowIncidence, size, caps, start,
     # solve over the used-edge subset (identical float sequence — unused
     # edges never saturate) and scatter edge_bytes back at the end
     used, edge_c, cap_c = _compress_edges(inc)
+    record = recorder is not None and recorder.link_policy is not None
+    if record:
+        sel_g = recorder.link_policy.select(inc, caps)
+        # selected edges carry load, so they all appear in `used`; keep
+        # the intersection anyway (degenerate degraded incidences)
+        sel_g = sel_g[np.isin(sel_g, used)]
+        sel_c = np.searchsorted(used, sel_g)
+        max_j = max(1, recorder.link_policy.max_epochs)
+    else:
+        sel_c, max_j = None, 0
+    key = (size.shape[0], int(used.size), int(inc.flow.shape[0]),
+           use_pallas, record, max_j,
+           int(sel_c.shape[0]) if record else 0)
+    cold = key not in _JIT_SEEN
+    _JIT_SEEN.add(key)
+    t0_wall = time.perf_counter()
     with enable_x64():
-        finish, used_bytes, n_epochs, done, ok = _event_loop_jit()(
+        out = _event_loop_jit()(
             jnp.asarray(inc.flow), jnp.asarray(edge_c),
             jnp.asarray(inc.frac), jnp.asarray(cap_c),
             jnp.asarray(size), jnp.asarray(caps), jnp.asarray(start),
-            jnp.asarray(tol), E=used.size, use_pallas=use_pallas)
+            jnp.asarray(tol),
+            jnp.asarray(sel_c) if record else None,
+            E=used.size, use_pallas=use_pallas, record=record,
+            max_j=max_j)
+        finish, used_bytes, n_epochs, done, ok = out[:5]
         if not bool(ok):
             raise RuntimeError("water-filling failed to converge "
                                f"({inc.n_flows} flows, {inc.n_edges} "
@@ -321,6 +455,15 @@ def _simulate_incidence_jit(inc: FlowIncidence, size, caps, start,
         edge_bytes = np.zeros(inc.n_edges)
         edge_bytes[used] = np.asarray(used_bytes)
         n_epochs = int(n_epochs)
+        if record:
+            j_t, j_dt, j_act, j_util = (np.asarray(a) for a in out[5:9])
+            n = min(n_epochs, max_j)
+            recorder.record_epoch_journal(
+                j_t[:n], j_dt[:n], j_act[:n], sel_g, j_util[:n],
+                dropped=n_epochs - n)
+    get_metrics().observe(
+        "sim.jit_cold_call_s" if cold else "sim.jit_exec_s",
+        time.perf_counter() - t0_wall)
     return _finalize_result(inc, size, caps, start, finish, edge_bytes,
                             n_epochs, net)
 
@@ -436,7 +579,7 @@ def simulate_flow_batches(router, batches: "list[list[FlowSpec]]",
     (``incidence_cached``): a schedule that reuses (src, dst) pairs
     across phases — every collective does — only walks each pair once,
     instead of re-extracting the full batch every phase
-    (``router.incidence_calls`` counts the actual engine walks).
+    (the ``incidence.walks`` metric counts the actual engine walks).
     """
     if rate_cap_gbps is None:
         rate_cap_gbps = router.topo.port_gbps if hasattr(router, "topo") \

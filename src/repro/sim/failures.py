@@ -17,12 +17,14 @@ that factor into the degraded-throughput rows.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.routing_graph import GraphRouter
 from repro.core.topology import SwitchGraph, Topology
+from repro.telemetry import get_metrics, get_recorder
 from .fairshare import flow_incidence
 
 
@@ -170,6 +172,7 @@ def degraded_router(topo: Topology, spec: FailureSpec,
     dg = degrade_graph(topo.build_graph(), spec)
     router = GraphRouter(dg.graph, backend=backend)
     router.hops  # force the BFS: raises ValueError when disconnected
+    get_metrics().inc("failures.reroute_recomputes")
     return router, dg
 
 
@@ -218,7 +221,8 @@ def failure_throughput(topo: Topology, demand_builder, spec: FailureSpec,
 def recovery_curve(topo: Topology, demand_builder, spec: FailureSpec,
                    offered_per_nic_gbps: float, mode: str = "adaptive",
                    backend: str = "auto",
-                   throughput_row: "dict | None" = None) -> "list[dict]":
+                   throughput_row: "dict | None" = None,
+                   reroute_wall_s: "float | None" = None) -> "list[dict]":
     """Three-phase degraded-fabric curve for one traffic matrix.
 
     * ``healthy`` — routed throughput on the intact fabric;
@@ -231,15 +235,28 @@ def recovery_curve(topo: Topology, demand_builder, spec: FailureSpec,
 
     Pass a precomputed :func:`failure_throughput` record as
     ``throughput_row`` to reuse its degraded routing for the
-    ``rerouted`` phase instead of re-deriving it.
+    ``rerouted`` phase instead of re-deriving it — and its measured wall
+    time as ``reroute_wall_s`` so the re-route phase still has a real
+    duration.
+
+    Each row carries ``phase_wall_s`` (measured wall time of that phase's
+    computation: detect = failure sampling + loss estimate, re-route =
+    the degraded-routing recompute) and ``t_offset_s`` (cumulative start
+    offset), so the recovery window is a measured span, not an inferred
+    one; an active flight recorder gets the same three spans on a
+    ``failures`` track.
     """
     healthy_g = topo.build_graph()
     healthy = GraphRouter(healthy_g, backend=backend)
+    t0 = time.perf_counter()
     dem = demand_builder(topo, offered_per_nic_gbps, healthy_g)
     ll_h = healthy.route(dem, mode)
+    wall_h = time.perf_counter() - t0
     rows = [{"phase": "healthy", "delivered_fraction":
              round(min(1.0, ll_h.saturation_throughput()), 6),
              "max_util": round(ll_h.max_utilization(), 6)}]
+    # detect window: sample what broke + estimate the pre-reroute loss
+    t0 = time.perf_counter()
     dg = degrade_graph(healthy_g, spec)
     # pre-reroute: flows lose the ECMP share that crossed failed edges
     inc = flow_incidence(healthy, dem, "minimal")
@@ -257,11 +274,14 @@ def recovery_curve(topo: Topology, demand_builder, spec: FailureSpec,
     factor = plane_capacity_factor(topo, spec)
     stall_delivered = float((g * (1 - lost)).sum() / g.sum()) if g.sum() \
         else 1.0
+    wall_f = time.perf_counter() - t0
     rows.append({"phase": "failed",
                  "delivered_fraction":
                      round(min(1.0, ll_h.saturation_throughput())
                            * stall_delivered * factor, 6),
                  "stalled_share": round(1 - stall_delivered, 6)})
+    # re-route window: the degraded-routing recompute
+    t0 = time.perf_counter()
     try:
         rr = throughput_row if throughput_row is not None else \
             failure_throughput(topo, demand_builder, spec,
@@ -274,4 +294,22 @@ def recovery_curve(topo: Topology, demand_builder, spec: FailureSpec,
     except ValueError as e:           # disconnected survivors
         rows.append({"phase": "rerouted", "disconnected": True,
                      "reason": str(e)})
+    wall_r = time.perf_counter() - t0
+    if throughput_row is not None and reroute_wall_s is not None:
+        wall_r = reroute_wall_s           # the reused recompute's wall
+    offset = 0.0
+    rec = get_recorder()
+    for row, wall in zip(rows, (wall_h, wall_f, wall_r)):
+        row["phase_wall_s"] = round(wall, 6)
+        row["t_offset_s"] = round(offset, 6)
+        if rec is not None:
+            rec.span(f"{spec.label()}:{row['phase']}", offset, wall,
+                     process="failures", thread=topo.name,
+                     cat="recovery",
+                     args={k: v for k, v in row.items()
+                           if k not in ("phase_wall_s", "t_offset_s")})
+        offset += wall
+    mx = get_metrics()
+    mx.observe("failures.detect_wall_s", wall_f)
+    mx.observe("failures.reroute_wall_s", wall_r)
     return rows

@@ -42,6 +42,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.routing_vec import DemandArrays, _scatter_add, get_backend
+from repro.telemetry import get_metrics
 
 FAIRSHARE_BACKENDS = ("numpy", "jax", "pallas", "auto")
 
@@ -181,7 +182,7 @@ def max_min_rates(inc: FlowIncidence, rate_caps_gbps: np.ndarray,
 
     used, edge_c, cap_c = _compress_edges(inc)
     with enable_x64():
-        rates, converged = _waterfill_jit()(
+        rates, converged, rounds = _waterfill_jit()(
             jnp.asarray(inc.flow), jnp.asarray(edge_c),
             jnp.asarray(inc.frac), jnp.asarray(cap_c),
             jnp.asarray(caps), jnp.asarray(active), jnp.asarray(tol),
@@ -189,6 +190,10 @@ def max_min_rates(inc: FlowIncidence, rate_caps_gbps: np.ndarray,
         if not bool(converged):
             raise RuntimeError("water-filling failed to converge "
                                f"({F} flows, {inc.n_edges} edges)")
+        mx = get_metrics()
+        if mx.enabled:
+            mx.inc("waterfill.solves")
+            mx.inc("waterfill.rounds", int(rounds))
         return np.asarray(rates)
 
 
@@ -210,9 +215,11 @@ def _max_min_rates_reference(inc: FlowIncidence, caps: np.ndarray,
     rates = xp.zeros(F)
     unfrozen = xp.asarray(active.copy())
     cap_left = cap_e
+    rounds = 0
     for _ in range(F + E + 2):
         if not bool(unfrozen.any()):
             break
+        rounds += 1
         live = xp.where(unfrozen[flow], frac, 0.0)
         wsum = _scatter_add(xp, xp.zeros(E), edge, live)
         open_e = wsum > tol
@@ -232,6 +239,10 @@ def _max_min_rates_reference(inc: FlowIncidence, caps: np.ndarray,
     else:
         raise RuntimeError("water-filling failed to converge "
                            f"({F} flows, {E} edges)")
+    mx = get_metrics()
+    if mx.enabled:
+        mx.inc("waterfill.solves")
+        mx.inc("waterfill.rounds", rounds)
     return np.asarray(rates)
 
 
@@ -307,7 +318,10 @@ def _waterfill_body(flow, edge, frac, cap_e, caps, tol, E: int,
 
 @functools.lru_cache(maxsize=1)
 def _waterfill_jit():
-    """Build (once) the jitted standalone solve: ``(rates, converged)``."""
+    """Build (once) the jitted standalone solve:
+    ``(rates, converged, rounds)`` (``rounds`` = while-loop iterations —
+    the telemetry layer's ``waterfill.rounds`` counter; numerically
+    inert, it was always part of the loop state)."""
     import jax
     import jax.numpy as jnp
 
@@ -316,8 +330,8 @@ def _waterfill_jit():
               E: int, use_pallas: bool):
         cond, body, init = _waterfill_body(flow, edge, frac, cap_e, caps,
                                            tol, E, use_pallas)
-        rates, unfrozen, _, _ = jax.lax.while_loop(cond, body,
+        rates, unfrozen, _, i = jax.lax.while_loop(cond, body,
                                                    init(active))
-        return rates, jnp.logical_not(unfrozen.any())
+        return rates, jnp.logical_not(unfrozen.any()), i
 
     return solve

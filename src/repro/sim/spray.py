@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.netsim import DEFAULT_NET, NetParams, make_router
 from repro.core.planes import SprayConfig
+from repro.telemetry import get_metrics
 from .events import (FlowSpec, flows_to_demands, path_latency,
                      simulate_incidence)
 from .fairshare import flow_incidence
@@ -95,7 +96,10 @@ def simulate_sprayed(topo, flows: "list[FlowSpec]",
     if not alive:
         raise RuntimeError("all planes down")
     dead = [k for k in range(cfg.n_planes) if k not in alive]
+    mx = get_metrics()
+    mx.inc("spray.plane_sims", len(alive))
     if dead:
+        mx.inc("spray.respray_events", len(dead))
         extra = per_plane[:, dead].sum(axis=1) / len(alive)
         per_plane[:, dead] = 0.0
         for k in alive:

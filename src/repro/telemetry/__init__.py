@@ -1,0 +1,18 @@
+"""Observability for the whole sim stack: metrics, traces, dashboards.
+
+Zero-cost when disabled — the ambient registry defaults to a no-op
+singleton and the jitted solver paths are never instrumented inside jit.
+See ``docs/observability.md`` for the metrics catalog and usage.
+"""
+
+from .metrics import (MetricsRegistry, NullRegistry, NULL_METRICS,
+                      get_metrics, collecting)
+from .trace import (LinkSeriesPolicy, TraceRecorder, get_recorder,
+                    recording, validate_trace)
+
+__all__ = [
+    "MetricsRegistry", "NullRegistry", "NULL_METRICS", "get_metrics",
+    "collecting",
+    "LinkSeriesPolicy", "TraceRecorder", "get_recorder", "recording",
+    "validate_trace",
+]
