@@ -36,8 +36,10 @@ DEFAULT_THRESHOLD = 1.5
 STALE_CSV = "bench_results.csv"
 
 # wall-clock keys (lower is better); simulated-time results such as
-# fct_p50_us or closed_form_s are deterministic outputs, not perf
-# metrics, and are deliberately NOT matched
+# fct_p50_us, ttft_p99_us or closed_form_s are deterministic outputs,
+# not perf metrics, and are deliberately NOT matched.  Absent artifacts
+# (e.g. an older result set without BENCH_serving.json) simply
+# contribute no metrics — --check only gates what exists.
 _TIME_KEYS = {"route_s", "incidence_s", "vectorized_s", "legacy_s",
               "demand_build_vec_s", "demand_build_legacy_s",
               "sim_wall_s"}
@@ -62,7 +64,7 @@ def _is_speedup_key(key: str) -> bool:
 
 
 def _element_id(item: dict, index: int) -> str:
-    for k in ("preset", "topology", "name", "label", "arch"):
+    for k in ("preset", "topology", "name", "label", "arch", "tenant"):
         v = item.get(k)
         if isinstance(v, str) and v:
             return v

@@ -10,6 +10,7 @@ quantity's latency in us where the bench IS a latency model).
   traffic     — synthetic-traffic + collective sweep   (§6 future work)
   collectives — JAX multi-plane collective equivalence + wall time
   cosim       — training-step co-sim on the fabric     (§6 future work)
+  serving     — multi-tenant serving SLOs per fabric   (§6 future work)
   spray       — NIC plane-spraying efficiency model    (§2)
   roofline    — per (arch x shape) roofline terms from the dry-run
 """
@@ -716,6 +717,105 @@ def bench_cosim():
          f"engines_agree={'yes' if agree else 'NO'}")
 
 
+# ------------------------------------------------------------- serving ----
+
+
+def bench_serving():
+    """Multi-tenant serving on MPHX vs two Table-2 baselines at matched
+    cost: per-tenant SLO rows (FCT/TTFT percentiles, goodput,
+    slowdown-vs-isolation), cost-normalized serving goodput, the
+    uncontended closed-form KV-transfer pin at 1e-6, and a same-seed
+    reproducibility check.  Writes results/BENCH_serving.json."""
+    from repro.core.cost import cost_report
+    from repro.core.netsim import gbps_to_Bps, make_router
+    from repro.experiments.servesuite import (DEFAULT_SERVING_TOPOS,
+                                              DEFAULT_TENANTS, tenant_specs)
+    from repro.experiments.sweep import SWEEP_TOPOLOGIES
+    from repro.sim.events import (flows_to_demands, path_latency,
+                                  simulate_incidence)
+    from repro.sim.fairshare import flow_incidence
+    from repro.workload import (ServingTenantSpec, SizeDist,
+                                build_serving_workload, run_tenant_mix,
+                                slo_rows)
+    from repro.cosim.placement import rank_to_switch
+
+    seed = 0
+    specs = tenant_specs(list(DEFAULT_TENANTS))
+    record = {"schema_version": 1, "bench": "serving", "seed": seed,
+              "tenants": list(DEFAULT_TENANTS), "cells": []}
+    first_rows = {}
+    for tn in DEFAULT_SERVING_TOPOS:
+        topo = SWEEP_TOPOLOGIES[tn]
+        mix, us = timed(lambda t=topo: run_tenant_mix(t, specs, seed=seed))
+        rows = slo_rows(mix)
+        first_rows[tn] = rows
+        per_nic = cost_report(topo).per_nic_usd
+        nics_used = sum(t.n_nics for t in mix.traffic)
+        serving = [r for r in rows if r["kind"] == "serving"]
+        goodput = sum(r["goodput_gbps"] or 0.0 for r in serving)
+        worst_ttft = max(r["ttft_p99_us"] for r in serving)
+        cell = {
+            "topology": tn, "sim_wall_s": us / 1e6,
+            "cost_per_nic_usd": round(per_nic, 2),
+            "nics_used": nics_used,
+            "serving_goodput_gbps": round(goodput, 3),
+            "serving_ttft_p99_us": worst_ttft,
+            "goodput_gbps_per_kusd": round(
+                goodput / (per_nic * nics_used / 1e3), 4),
+            "rows": rows,
+        }
+        record["cells"].append(cell)
+        emit(f"serving/{tn}", worst_ttft,
+             f"goodput_gbps={goodput:.0f};per_nic_usd={per_nic:.0f};"
+             f"gbps_per_kusd={cell['goodput_gbps_per_kusd']:.2f}")
+    # same-seed reproducibility: an identical second run must produce
+    # identical SLO rows on every fabric
+    mix2 = run_tenant_mix(SWEEP_TOPOLOGIES[DEFAULT_SERVING_TOPOS[0]],
+                          specs, seed=seed)
+    record["runs_agree"] = slo_rows(mix2) == \
+        first_rows[DEFAULT_SERVING_TOPOS[0]]
+    # closed-form pin: one uncontended KV-transfer flow's FCT must equal
+    # share_bytes / min(cap, bottleneck) + path alpha exactly
+    topo = SWEEP_TOPOLOGIES[DEFAULT_SERVING_TOPOS[0]]
+    router = make_router(topo, engine="auto")
+    switch_of = rank_to_switch(topo, getattr(router, "graph", None))
+    # tp spans a full switch so the prefill -> decode shards cross the
+    # fabric (a replica inside one switch is intra-switch by design)
+    pin_spec = ServingTenantSpec(
+        "pin", rate_hz=40.0, duration_s=0.05,
+        prompt_tokens=SizeDist("fixed", mean=1000.0),
+        prefill_replicas=1, decode_replicas=1, tp=topo.p)
+    w = build_serving_workload(pin_spec, switch_of, 0, topo.port_gbps,
+                               np.random.default_rng(seed))
+    f = w.flows[0]
+    share = f.size_bytes / topo.n_planes
+    cap = float(w.caps_gbps[0])
+    inc = flow_incidence(router, flows_to_demands([f]), "minimal")
+    res = simulate_incidence(inc, share, cap, start_s=f.start_s)
+    bneck = float(inc.bottleneck_gbps()[0])
+    expected = (share / gbps_to_Bps(min(cap, bneck))
+                + float(path_latency(inc)[0]))
+    rel = abs(float(res.fct_s[0]) - expected) / expected
+    record["closed_form"] = {
+        "kv_bytes": f.size_bytes, "share_bytes": share,
+        "cap_gbps": cap, "bottleneck_gbps": bneck,
+        "expected_us": expected * 1e6,
+        "measured_us": float(res.fct_s[0]) * 1e6,
+        "rel_err": rel,
+    }
+    record["matches_closed_form"] = bool(rel < 1e-6)
+    out = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "BENCH_serving.json")
+    with open(path, "w") as fh:
+        json.dump(record, fh, indent=2)
+        fh.write("\n")
+    emit("serving/closed_form", record["closed_form"]["measured_us"],
+         f"rel_err={rel:.2e};"
+         f"match={'yes' if record['matches_closed_form'] else 'NO'};"
+         f"runs_agree={'yes' if record['runs_agree'] else 'NO'}")
+
+
 # --------------------------------------------------- experiment suites ----
 
 
@@ -737,6 +837,7 @@ BENCHES = {
     "sim": bench_flow_sim,
     "sim-scale": bench_sim_scale,
     "cosim": bench_cosim,
+    "serving": bench_serving,
     "experiments": bench_experiments,
     "diameter": bench_diameter,
     "flattening": bench_flattening,

@@ -64,6 +64,21 @@ if [[ "${SKIP_SIM_SMOKE:-0}" != "1" ]]; then
     rm -rf "$SIM_SMOKE_OUT"
 fi
 
+if [[ "${SKIP_SERVING_SMOKE:-0}" != "1" ]]; then
+    # multi-tenant serving smoke on a tiny fabric: open-loop tenant mix
+    # with per-tenant SLO rows, run twice with the same seed to catch
+    # any nondeterminism (the artifacts must be byte-identical)
+    SERVING_SMOKE_OUT="$(mktemp -d)"
+    python -m repro.experiments.run --suite serving \
+        --topos mphx-2p-8x8 --seed 0 --serving-duration-ms 20 \
+        --out "$SERVING_SMOKE_OUT/a"
+    python -m repro.experiments.run --suite serving \
+        --topos mphx-2p-8x8 --seed 0 --serving-duration-ms 20 \
+        --out "$SERVING_SMOKE_OUT/b"
+    cmp "$SERVING_SMOKE_OUT/a/serving.json" "$SERVING_SMOKE_OUT/b/serving.json"
+    rm -rf "$SERVING_SMOKE_OUT"
+fi
+
 if [[ "${SKIP_COSIM_SMOKE:-0}" != "1" ]]; then
     # training-step co-sim smoke: one model config on a tiny fabric,
     # both routing engines + the mapped placement (MPHX cells run all

@@ -25,6 +25,7 @@ DEFAULT_DOCS = [
     os.path.join("docs", "simulation.md"),
     os.path.join("docs", "cosim.md"),
     os.path.join("docs", "observability.md"),
+    os.path.join("docs", "serving.md"),
 ]
 
 

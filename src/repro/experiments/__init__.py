@@ -15,8 +15,11 @@ whole traffic matrices in one shot:
 * :mod:`~repro.experiments.cosuite`   — training-step co-simulation
   (``cosim``): measured step time and tokens/sec per fabric, on
   :mod:`repro.cosim`;
+* :mod:`~repro.experiments.servesuite` — multi-tenant serving suite
+  (``serving``): per-tenant SLO rows for mixed open-loop tenants, on
+  :mod:`repro.workload`;
 * :mod:`~repro.experiments.artifacts` — JSON + markdown artifact writers
-  (schema v4);
+  (schema v6);
 * :mod:`~repro.experiments.run`       — the CLI
   (``python -m repro.experiments.run --suite table2``).
 """
@@ -24,6 +27,8 @@ whole traffic matrices in one shot:
 from .cosuite import (DEFAULT_COSIM_CONFIGS, DEFAULT_COSIM_TOPOS,
                       default_mesh, run_cosim_suite)
 from .scenarios import SCENARIOS, Scenario, available_scenarios, get_scenario
+from .servesuite import (DEFAULT_SERVING_TOPOS, DEFAULT_TENANTS,
+                         TENANT_PRESETS, run_serving_suite, tenant_specs)
 from .simsuite import (DEFAULT_FAILURE_SPECS, DEFAULT_SIM_SCENARIOS,
                        DEFAULT_SIM_TOPOS, run_failures_suite, run_sim_suite)
 from .sweep import (DEFAULT_SWEEP_TOPOS, ROUTING_MODES, SWEEP_TOPOLOGIES,
@@ -34,6 +39,8 @@ __all__ = [
     "DEFAULT_COSIM_CONFIGS", "DEFAULT_COSIM_TOPOS", "default_mesh",
     "run_cosim_suite",
     "SCENARIOS", "Scenario", "available_scenarios", "get_scenario",
+    "DEFAULT_SERVING_TOPOS", "DEFAULT_TENANTS", "TENANT_PRESETS",
+    "run_serving_suite", "tenant_specs",
     "DEFAULT_FAILURE_SPECS", "DEFAULT_SIM_SCENARIOS", "DEFAULT_SIM_TOPOS",
     "run_failures_suite", "run_sim_suite",
     "DEFAULT_SWEEP_TOPOS", "ROUTING_MODES", "SWEEP_TOPOLOGIES",

@@ -1,11 +1,11 @@
 """JSON + markdown artifact writers for experiment suites.
 
-Artifact schema (``schema_version`` 5):
+Artifact schema (``schema_version`` 6):
 
 ```json
 {
-  "schema_version": 5,
-  "suite": "table2" | "sweep" | "sim" | "failures" | "cosim",
+  "schema_version": 6,
+  "suite": "table2" | "sweep" | "sim" | "failures" | "cosim" | "serving",
   "generated_by": "repro.experiments",
   "params": { ... suite parameters ... },
   "rows": [ { ... flat record ... }, ... ],
@@ -19,6 +19,18 @@ table, for review in PRs).
 
 Schema history:
 
+* **v6** — new ``serving`` suite from the multi-tenant workload
+  generator (``repro.workload``): one row per (topology, tenant) with
+  measured per-tenant ``fct_p50_us`` / ``fct_p99_us`` / ``fct_p999_us``,
+  TTFT-proxy percentiles for serving tenants (``ttft_*_us``),
+  ``goodput_gbps``, slowdown-vs-isolation
+  (``slowdown_mean`` / ``slowdown_p99``) and stall counts; params carry
+  the ``seed`` plus the fully-resolved tenant specs, and the rows hold
+  no wall-clock fields — same seed, same bytes.  Undersized fabrics
+  produce explicit ``{"skipped": true, ...}`` records.  ``sim`` rows
+  gain an optional ``per_tag`` FCT breakdown when the caller attributes
+  demand rows with flow tags.  All existing suites' columns are
+  unchanged.
 * **v5** — optional top-level ``telemetry`` block: the ambient
   :class:`repro.telemetry.MetricsRegistry` snapshot (operational
   counters — engine walks, incidence-cache hit/miss, water-filling
@@ -63,7 +75,7 @@ import json
 import os
 from typing import Sequence
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 
 def artifact_payload(suite: str, params: dict, rows: list[dict]) -> dict:

@@ -12,19 +12,22 @@ Examples::
         --topos mphx-2p-8x8 dragonfly-small --failures link:0.01 plane:1
     PYTHONPATH=src python -m repro.experiments.run --suite cosim \
         --config kimi_k2_1t_a32b --ranks 64
+    PYTHONPATH=src python -m repro.experiments.run --suite serving \
+        --tenants chat burst train --seed 7
     PYTHONPATH=src python -m repro.experiments.run --suite all
     PYTHONPATH=src python -m repro.experiments.run --suite cosim \
         --topos mphx-2p-8x8 --trace step_trace.json
 
 Artifacts land in ``--out`` (default ``results/experiments``):
-``{table2,sweep,sim,failures,cosim}.{json,md}``; the JSON schema (v5) is
-documented in :mod:`repro.experiments.artifacts` and
+``{table2,sweep,sim,failures,cosim,serving}.{json,md}``; the JSON schema
+(v6) is documented in :mod:`repro.experiments.artifacts` and
 ``docs/experiments.md`` / ``docs/simulation.md``.  ``--trace OUT.json``
 runs every selected suite under the fabric flight recorder
 (:mod:`repro.telemetry`) and exports one Chrome/Perfetto ``trace_event``
 JSON; suites with nothing to trace (analytic-only paths) leave explicit
 skip records in the trace's ``otherData.skipped``, and the artifacts
-gain the schema-v5 ``telemetry`` block.
+gain the schema-v5 ``telemetry`` block.  ``--seed`` makes the serving
+suite's artifacts byte-reproducible run to run.
 """
 
 from __future__ import annotations
@@ -37,12 +40,14 @@ from repro.sim.failures import parse_failure_spec
 from .cosuite import (DEFAULT_COSIM_CONFIGS, DEFAULT_COSIM_RANKS,
                       DEFAULT_COSIM_TOPOS, run_cosim_suite)
 from .scenarios import SCENARIOS
+from .servesuite import (DEFAULT_SERVING_TOPOS, DEFAULT_TENANTS,
+                         TENANT_PRESETS, run_serving_suite)
 from .simsuite import (DEFAULT_FAILURE_SPECS, run_failures_suite,
                        run_sim_suite)
 from .sweep import (DEFAULT_OUTDIR, DEFAULT_SWEEP_TOPOS, SWEEP_TOPOLOGIES,
                     run_sweep_suite, run_table2_suite)
 
-SUITES = ["table2", "sweep", "sim", "failures", "cosim", "all"]
+SUITES = ["table2", "sweep", "sim", "failures", "cosim", "serving", "all"]
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -119,6 +124,20 @@ def build_parser() -> argparse.ArgumentParser:
                    default="steady",
                    help="cosim phase execution: steady-state step scaling "
                    "or the fully serialized batch schedule")
+    p.add_argument("--tenants", nargs="+", choices=sorted(TENANT_PRESETS),
+                   default=None,
+                   help="serving suite: tenant presets to mix on each "
+                   f"fabric (default: {' '.join(DEFAULT_TENANTS)})")
+    p.add_argument("--seed", type=int, default=0,
+                   help="root seed for workload RNG (one SeedSequence "
+                   "spawning a child per tenant) — same seed, same "
+                   "artifact, byte for byte")
+    p.add_argument("--serving-duration-ms", type=float, default=None,
+                   help="serving suite: override every open-loop "
+                   "tenant's window (CI smokes shrink it)")
+    p.add_argument("--serving-rate-scale", type=float, default=1.0,
+                   help="serving suite: scale every open-loop tenant's "
+                   "arrival rate")
     p.add_argument("--trace", default=None, metavar="OUT.json",
                    help="run the suites under the fabric flight recorder "
                    "and export a Chrome/Perfetto trace_event JSON "
@@ -223,6 +242,24 @@ def _run_suites(args, specs, rec=None) -> int:
               f"{payload['params']['n_skipped']} skipped -> "
               f"{args.out}/cosim.json, {args.out}/cosim.md")
         _note_if_untraced(rec, "cosim", n0,
+                          "suite produced no trace events (all cells "
+                          "skipped)")
+    if args.suite in ("serving", "all"):
+        n0 = rec.n_events if rec else 0
+        # serving defaults to its own small-MPHX + baseline trio
+        serving_topos = args.topos if args.topos \
+            else list(DEFAULT_SERVING_TOPOS)
+        payload = run_serving_suite(
+            args.out, topo_names=serving_topos,
+            tenant_names=args.tenants, seed=args.seed,
+            engine=args.engine, backend=args.backend,
+            sim_backend=args.sim_backend,
+            duration_ms=args.serving_duration_ms,
+            rate_scale=args.serving_rate_scale)
+        print(f"serving: {payload['params']['n_rows']} tenant rows, "
+              f"{payload['params']['n_skipped']} skipped -> "
+              f"{args.out}/serving.json, {args.out}/serving.md")
+        _note_if_untraced(rec, "serving", n0,
                           "suite produced no trace events (all cells "
                           "skipped)")
     if args.suite in ("failures", "all"):

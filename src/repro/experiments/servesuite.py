@@ -1,0 +1,155 @@
+"""Multi-tenant serving suite: per-tenant SLOs per fabric.
+
+For each topology, :func:`run_serving_suite` places a named tenant mix
+(serving + training + background presets from :data:`TENANT_PRESETS`)
+on the fabric, runs the shared open-loop simulation plus per-tenant
+isolation baselines (:func:`repro.workload.run_tenant_mix`), and emits
+one SLO row per (topology, tenant): p50/p99/p999 FCT, TTFT-proxy
+percentiles for serving tenants, goodput, and slowdown-vs-isolation.
+Small MPHX runs next to the Table-2 baselines so the rows answer
+"which fabric serves this traffic within SLO".
+
+Every random draw descends from the single ``seed`` parameter through
+one :class:`numpy.random.SeedSequence` (no module-level RNG state, no
+wall-clock fields in rows), so the artifact is byte-identical across
+runs with the same seed.  Fabrics too small for the tenants' NIC
+demand become explicit skip records.
+
+Writes schema-v6 ``serving.json`` / ``serving.md``
+(:mod:`~repro.experiments.artifacts`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+from repro.core.netsim import make_router
+from repro.workload import (BackgroundTenantSpec, ServingTenantSpec,
+                            SizeDist, TrainingTenantSpec, run_tenant_mix,
+                            slo_rows, tenant_kind)
+from .artifacts import (artifact_payload, markdown_table, write_json,
+                        write_markdown)
+from .sweep import DEFAULT_OUTDIR, SWEEP_TOPOLOGIES
+
+# small MPHX plus two Table-2 baseline fabrics at comparable NIC counts
+DEFAULT_SERVING_TOPOS = ["mphx-2p-8x8", "ft3-small", "dragonfly-small"]
+
+# named tenant presets the CLI --tenants flag selects from
+TENANT_PRESETS: dict = {
+    "chat": ServingTenantSpec(
+        "chat", arch="mixtral-8x22b", rate_hz=400.0, duration_s=0.25,
+        arrival="poisson",
+        prompt_tokens=SizeDist("lognormal", mean=800.0, sigma=1.0),
+        prefill_replicas=2, decode_replicas=2, tp=4),
+    "burst": ServingTenantSpec(
+        "burst", arch="mixtral-8x22b", rate_hz=400.0, duration_s=0.25,
+        arrival="mmpp", burstiness=6.0,
+        prompt_tokens=SizeDist("pareto", alpha=1.2, lo=128.0, hi=32768.0),
+        prefill_replicas=2, decode_replicas=2, tp=4,
+        hotspot_fraction=0.5),
+    "train": TrainingTenantSpec(
+        "train", arch="mixtral-8x22b", n_ranks=16, n_steps=1),
+    "web": BackgroundTenantSpec(
+        "web", rate_hz=4000.0, duration_s=0.25,
+        size_bytes=SizeDist("empirical", name="websearch"), n_nics=8),
+}
+DEFAULT_TENANTS = ["chat", "burst", "train"]
+
+
+def tenant_specs(names: "list[str]", duration_ms: "float | None" = None,
+                 rate_scale: float = 1.0) -> "list":
+    """Resolve preset names to specs, optionally rescaling the open-loop
+    window/rate (CI smokes shrink both without new presets)."""
+    specs = []
+    for n in names:
+        if n not in TENANT_PRESETS:
+            raise ValueError(f"unknown tenant preset {n!r}; "
+                             f"known: {sorted(TENANT_PRESETS)}")
+        spec = TENANT_PRESETS[n]
+        changes: dict = {}
+        if hasattr(spec, "duration_s") and duration_ms is not None:
+            changes["duration_s"] = duration_ms * 1e-3
+        if hasattr(spec, "rate_hz") and rate_scale != 1.0:
+            changes["rate_hz"] = spec.rate_hz * rate_scale
+        specs.append(dataclasses.replace(spec, **changes) if changes
+                     else spec)
+    return specs
+
+
+def _spec_summary(spec) -> dict:
+    d = dataclasses.asdict(spec)
+    for k, v in list(d.items()):
+        if isinstance(v, dict):            # nested SizeDist
+            d[k] = {kk: vv for kk, vv in v.items()}
+    return {"kind": tenant_kind(spec), **d}
+
+
+def run_serving_suite(outdir: str = DEFAULT_OUTDIR,
+                      topo_names: "list[str] | None" = None,
+                      tenant_names: "list[str] | None" = None,
+                      seed: int = 0,
+                      engine: str = "auto",
+                      backend: str = "auto",
+                      sim_backend: str = "numpy",
+                      duration_ms: "float | None" = None,
+                      rate_scale: float = 1.0) -> dict:
+    """Run the tenant mix on every topology; write ``serving.{json,md}``."""
+    names = topo_names or list(DEFAULT_SERVING_TOPOS)
+    tnames = tenant_names or list(DEFAULT_TENANTS)
+    specs = tenant_specs(tnames, duration_ms=duration_ms,
+                         rate_scale=rate_scale)
+    rows = []
+    for tn in names:
+        topo = SWEEP_TOPOLOGIES[tn]
+        try:
+            router = make_router(topo, backend=backend, engine=engine)
+        except (ValueError, NotImplementedError) as e:
+            print(f"serving: skipping {tn!r}: {e}", file=sys.stderr)
+            rows.append({"topology": tn, "skipped": True,
+                         "reason": str(e)})
+            continue
+        try:
+            mix = run_tenant_mix(topo, specs, seed=seed,
+                                 sim_backend=sim_backend, router=router)
+        except ValueError as e:
+            print(f"serving: skipping {tn!r}: {e}", file=sys.stderr)
+            rows.append({"topology": tn, "skipped": True,
+                         "reason": str(e)})
+            continue
+        for row in slo_rows(mix):
+            rows.append({"topology": tn, **row})
+    done = [r for r in rows if not r.get("skipped")]
+    payload = artifact_payload(
+        "serving",
+        {"topologies": names, "tenants": tnames, "seed": seed,
+         "engine": engine, "backend": backend,
+         "sim_backend": sim_backend, "duration_ms": duration_ms,
+         "rate_scale": rate_scale,
+         "tenant_specs": {n: _spec_summary(s)
+                          for n, s in zip(tnames, specs)},
+         "n_rows": len(done),
+         "n_skipped": sum(1 for r in rows if r.get("skipped"))},
+        rows)
+    write_json(os.path.join(outdir, "serving.json"), payload)
+    cols = ["topology", "tenant", "kind", "n_flows", "n_requests",
+            "fct_p50_us", "fct_p99_us", "fct_p999_us",
+            "ttft_p50_us", "ttft_p99_us", "ttft_p999_us",
+            "goodput_gbps", "slowdown_mean", "slowdown_p99", "n_stalled"]
+    sections = [
+        ("", "Per-tenant SLOs of a mixed serving + training tenant set "
+             "sharing each fabric: open-loop KV-transfer / collective / "
+             "background flows with tag-attributed measured FCTs "
+             "(`repro.workload`, see `docs/serving.md`).  Slowdown is "
+             "vs the same tenant alone on the fabric (same seed)."),
+        ("Per-tenant SLOs", markdown_table(done, cols)),
+    ]
+    skipped = [r for r in rows if r.get("skipped")]
+    if skipped:
+        sections.append(("Skipped",
+                         markdown_table(skipped, ["topology", "reason"])))
+    write_markdown(os.path.join(outdir, "serving.md"),
+                   "Multi-tenant serving — per-tenant SLOs per fabric",
+                   sections)
+    return payload

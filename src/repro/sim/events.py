@@ -35,12 +35,20 @@ from .fairshare import (FlowIncidence, _segment_sum, _waterfill_body,
 
 @dataclass(frozen=True)
 class FlowSpec:
-    """One finite flow: ``size_bytes`` from switch ``src`` to ``dst``."""
+    """One finite flow: ``size_bytes`` from switch ``src`` to ``dst``.
+
+    ``tag`` is an opaque attribution handle (e.g. a tenant id, or a
+    ``(tenant, request)`` tuple) carried through the simulation into the
+    per-flow results and telemetry — callers never re-derive ownership
+    by index arithmetic.  It does not affect the simulated float
+    sequence in any way.
+    """
 
     src: int
     dst: int
     size_bytes: float
     start_s: float = 0.0
+    tag: object = None
 
 
 def flows_to_demands(flows: "list[FlowSpec]") -> DemandArrays:
@@ -63,10 +71,31 @@ class FlowSimResult:
     incidence: FlowIncidence
     makespan_s: float = 0.0    # last finish (stalled flows excluded)
     n_epochs: int = 0
+    tags: "np.ndarray | None" = None   # (F,) object — opaque flow tags
 
     @property
     def stalled(self) -> np.ndarray:
         return ~np.isfinite(self.finish_s)
+
+    def tag_mask(self, tag) -> np.ndarray:
+        """(F,) bool — flows whose tag equals ``tag`` (requires tags)."""
+        if self.tags is None:
+            raise ValueError("simulation was run without flow tags")
+        return np.array([t == tag for t in self.tags], dtype=bool)
+
+    def flow_records(self) -> "list[dict]":
+        """Per-flow FCT records (start/finish/fct/size/tag), the
+        attribution-ready view tenant accounting consumes."""
+        tags = self.tags if self.tags is not None \
+            else np.full(self.size_bytes.shape[0], None, dtype=object)
+        return [
+            {"flow": f, "tag": tags[f],
+             "start_s": float(self.start_s[f]),
+             "finish_s": float(self.finish_s[f]),
+             "fct_s": float(self.fct_s[f]),
+             "size_bytes": float(self.size_bytes[f]),
+             "stalled": bool(~np.isfinite(self.finish_s[f]))}
+            for f in range(self.size_bytes.shape[0])]
 
     def transfer_s(self) -> np.ndarray:
         return self.finish_s - self.start_s
@@ -126,9 +155,21 @@ def _journal_util(inc: FlowIncidence, rates_act: np.ndarray,
         return np.where(cap[sel] > 0, loads[sel] / cap[sel], 0.0)
 
 
+def _normalize_tags(tags, F: int) -> "np.ndarray | None":
+    """(F,) object array of opaque flow tags, or None when absent."""
+    if tags is None:
+        return None
+    tag_list = list(tags)
+    if len(tag_list) != F:
+        raise ValueError(f"expected {F} tags, got {len(tag_list)}")
+    out = np.empty(F, dtype=object)
+    out[:] = tag_list
+    return out
+
+
 def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
                        start_s=None, net: NetParams = DEFAULT_NET,
-                       backend: str = "numpy") -> FlowSimResult:
+                       backend: str = "numpy", tags=None) -> FlowSimResult:
     """Run the event loop over a prebuilt incidence tensor.
 
     ``size_bytes`` / ``rate_caps_gbps`` / ``start_s`` broadcast to (F,).
@@ -163,6 +204,7 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
     if np.any(size < 0) or np.any(caps <= 0):
         raise ValueError("sizes must be >= 0 and rate caps > 0")
     backend = resolve_sim_backend(backend)
+    tag_arr = _normalize_tags(tags, F)
     rec = get_recorder()
     mx = get_metrics()
     t0_wall = time.perf_counter()
@@ -173,6 +215,7 @@ def simulate_incidence(inc: FlowIncidence, size_bytes, rate_caps_gbps,
     else:
         res = _simulate_incidence_numpy(inc, size, caps, start, net,
                                         backend, recorder=rec)
+    res.tags = tag_arr
     mx.inc("sim.runs")
     mx.inc("sim.flows", F)
     mx.inc("sim.epochs", res.n_epochs)
@@ -484,17 +527,19 @@ def simulate_flows(router, flows: "list[FlowSpec]", mode: str = "minimal",
     if rate_cap_gbps is None:
         rate_cap_gbps = router.topo.port_gbps if hasattr(router, "topo") \
             else router.graph.link_gbps
+    tags = [f.tag for f in flows]
     return simulate_incidence(
         inc, np.array([f.size_bytes for f in flows]),
         rate_cap_gbps,
-        np.array([f.start_s for f in flows]), net=net, backend=backend)
+        np.array([f.start_s for f in flows]), net=net, backend=backend,
+        tags=tags if any(t is not None for t in tags) else None)
 
 
 def simulate_demands(router, demands: DemandArrays, flow_time_s: float,
                      mode: str = "minimal", net: NetParams = DEFAULT_NET,
                      backend: str = "numpy",
                      inc: "FlowIncidence | None" = None,
-                     start_s=None) -> dict:
+                     start_s=None, tags=None) -> dict:
     """Measured-FCT summary of one traffic matrix at its offered rates.
 
     Each demand row becomes one flow sized so that at its offered Gbps it
@@ -510,17 +555,22 @@ def simulate_demands(router, demands: DemandArrays, flow_time_s: float,
     ``start_s`` (scalar or (F,)) staggers per-flow arrival offsets — e.g.
     dependent collective phases of a co-simulated training step arriving
     as the previous phase drains (:mod:`repro.cosim`).
+
+    ``tags`` (length-F, opaque — e.g. tenant ids) attributes each demand
+    row; when given, the returned row gains a ``per_tag`` breakdown of
+    flow counts and FCT percentiles keyed by ``str(tag)``.
     """
     gbps = np.asarray(demands.gbps, dtype=np.float64)
     if inc is None:
         inc = flow_incidence(router, demands, mode)
     res = simulate_incidence(inc, gbps_to_Bps(gbps) * flow_time_s, gbps,
-                             start_s=start_s, net=net, backend=backend)
+                             start_s=start_s, net=net, backend=backend,
+                             tags=tags)
     pct = res.fct_percentiles()
     slow = res.slowdown(gbps)
     ok = ~res.stalled
     offered = float(gbps.sum())
-    return {
+    row: dict = {
         "sim_flows": int(inc.n_flows),
         "sim_epochs": res.n_epochs,
         "sim_stalled": int(res.stalled.sum()),
@@ -537,6 +587,21 @@ def simulate_demands(router, demands: DemandArrays, flow_time_s: float,
         "slowdown_p99": round(float(np.percentile(slow[ok], 99)), 4)
             if ok.any() else None,
     }
+    if res.tags is not None:
+        per_tag: dict = {}
+        for tag in dict.fromkeys(res.tags.tolist()):   # stable order
+            m = res.tag_mask(tag) & ok
+            fct = res.fct_s[m]
+            per_tag[str(tag)] = {
+                "flows": int(res.tag_mask(tag).sum()),
+                "stalled": int((res.tag_mask(tag) & ~ok).sum()),
+                "fct_p50_us": round(float(np.percentile(fct, 50)) * 1e6, 3)
+                    if fct.size else None,
+                "fct_p99_us": round(float(np.percentile(fct, 99)) * 1e6, 3)
+                    if fct.size else None,
+            }
+        row["per_tag"] = per_tag
+    return row
 
 
 @dataclass
@@ -594,11 +659,13 @@ def simulate_flow_batches(router, batches: "list[list[FlowSpec]]",
             continue
         dem = flows_to_demands(flows)
         inc = flow_incidence(router, dem, mode, cached=True)
+        tags = [f.tag for f in flows]
         res = simulate_incidence(
             inc, np.array([f.size_bytes for f in flows]),
             rate_cap_gbps,
             t + np.array([f.start_s for f in flows]),
-            net=net, backend=backend)
+            net=net, backend=backend,
+            tags=tags if any(tg is not None for tg in tags) else None)
         done = np.isfinite(res.finish_s)
         if not done.all():
             raise RuntimeError("stalled flows in batch: fabric has a "

@@ -204,11 +204,15 @@ class TraceRecorder:
             self.metrics.inc("trace.dropped_flow_events",
                              int(done.size - take.size))
         self._flow_budget -= int(take.size)
+        tags = getattr(res, "tags", None)
         for f in take.tolist():
+            args = {"bytes": float(res.size_bytes[f])}
+            if tags is not None and tags[f] is not None:
+                args["tag"] = str(tags[f])
             self.span(f"flow[{f}]", float(res.start_s[f]),
                       float(res.finish_s[f] - res.start_s[f]),
                       process="sim", thread=label, cat="flow",
-                      args={"bytes": float(res.size_bytes[f])})
+                      args=args)
         stalled = int(res.stalled.sum())
         if stalled:
             self.metrics.inc("sim.stalled_flows", stalled)

@@ -1,0 +1,112 @@
+"""Per-tenant SLO accounting over a multi-tenant mix.
+
+Turns a :class:`~repro.workload.tenants.MixResult` into per-tenant SLO
+rows: FCT percentiles (p50/p99/p999), TTFT-proxy percentiles for
+serving tenants (request arrival -> prefill compute -> KV-transfer
+completion, including the path alpha; intra-switch-only requests pay
+the 2-hop alpha), goodput, and slowdown-vs-isolation (the same tenant's
+identical seed-derived trace alone on the fabric).
+
+Attribution is entirely tag-driven (``tag=(tenant, key)`` on every
+flow); nothing here re-derives ownership from flow indices.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .tenants import MixResult, TenantTraffic, tenant_mask
+
+SLO_PERCENTILES = (50, 99, 99.9)
+
+
+def _pcts(values: np.ndarray, unit: float = 1e6,
+          prefix: str = "fct") -> dict:
+    """p50/p99/p999 of ``values`` (seconds in, microseconds out)."""
+    keys = [f"{prefix}_p{str(q).replace('.', '')}_us"
+            for q in SLO_PERCENTILES]
+    if values.size == 0:
+        return {k: None for k in keys}
+    return {k: round(float(np.percentile(values, q)) * unit, 3)
+            for k, q in zip(keys, SLO_PERCENTILES)}
+
+
+def serving_ttft_s(mix: MixResult, name: str
+                   ) -> "tuple[np.ndarray, np.ndarray]":
+    """(R,) TTFT proxy per request of serving tenant ``name`` plus an
+    (R,) validity mask (False = a KV shard flow stalled).
+
+    TTFT proxy = (KV-transfer completion on the fabric clock, i.e. the
+    last shard's ``finish + path alpha``) minus the request's arrival;
+    prefill compute is inside because the KV flow starts at
+    ``arrival + prompt_tokens / prefill_tokens_per_s``.  Requests whose
+    shards all stayed intra-switch complete at ``kv_start + 2-hop
+    alpha``.
+    """
+    t = mix.tenant(name)
+    w = t.serving
+    if w is None:
+        raise ValueError(f"tenant {name!r} is not a serving tenant")
+    res = mix.mixed
+    comp = np.full(w.n_requests, -np.inf)
+    valid = np.ones(w.n_requests, dtype=bool)
+    for i in np.flatnonzero(tenant_mask(res, name)):
+        r = int(res.tags[i][1])
+        if not np.isfinite(res.finish_s[i]):
+            valid[r] = False
+            continue
+        comp[r] = max(comp[r], float(res.finish_s[i] + res.latency_s[i]))
+    if w.local_requests.size:
+        comp[w.local_requests] = (w.kv_start_s[w.local_requests]
+                                  + mix.alpha_local_s)
+    valid &= np.isfinite(comp)
+    return comp - w.arrival_s, valid
+
+
+def tenant_slo_row(mix: MixResult, t: TenantTraffic) -> dict:
+    """One tenant's flat SLO record (the serving suite's row unit)."""
+    res = mix.mixed
+    m = tenant_mask(res, t.name)
+    fin = np.isfinite(res.finish_s) & m
+    fct = res.fct_s[fin]
+    row = {
+        "tenant": t.name,
+        "kind": t.kind,
+        "n_nics": t.n_nics,
+        "n_flows": int(m.sum()),
+        "n_stalled": int((m & ~np.isfinite(res.finish_s)).sum()),
+        **_pcts(fct),
+    }
+    # goodput: full (all-planes) payload of finished flows plus
+    # intra-switch bytes, over the tenant's active span
+    full = res.size_bytes * mix.n_planes
+    intra = float(t.meta.get("intra_bytes", 0.0))
+    if t.serving is not None:
+        intra = t.serving.intra_bytes
+    delivered = float(full[fin].sum()) + intra
+    if fin.any():
+        span = float(res.finish_s[fin].max() - res.start_s[m].min())
+        row["goodput_gbps"] = round(delivered * 8 / 1e9 / span, 3) \
+            if span > 0 else None
+    else:
+        row["goodput_gbps"] = None
+    iso = mix.isolated.get(t.name)
+    if iso is not None:
+        both = fin[m] & np.isfinite(iso.finish_s)
+        if both.any():
+            slow = res.fct_s[m][both] / iso.fct_s[both]
+            row["slowdown_mean"] = round(float(slow.mean()), 4)
+            row["slowdown_p99"] = round(float(np.percentile(slow, 99)), 4)
+        else:
+            row["slowdown_mean"] = row["slowdown_p99"] = None
+    if t.serving is not None:
+        ttft, valid = serving_ttft_s(mix, t.name)
+        row["n_requests"] = t.serving.n_requests
+        row["n_requests_stalled"] = int((~valid).sum())
+        row.update(_pcts(ttft[valid], prefix="ttft"))
+    return row
+
+
+def slo_rows(mix: MixResult) -> "list[dict]":
+    """Per-tenant SLO rows for every tenant of the mix, spec order."""
+    return [tenant_slo_row(mix, t) for t in mix.traffic]

@@ -243,7 +243,7 @@ def test_table2_suite_artifact(tmp_path):
     assert (tmp_path / "table2.json").exists()
     assert (tmp_path / "table2.md").exists()
     disk = json.loads((tmp_path / "table2.json").read_text())
-    assert disk["schema_version"] == 5
+    assert disk["schema_version"] == 6
     assert disk["suite"] == "table2"
     assert len(disk["rows"]) == 8
     by_name = {r["topology"]: r for r in disk["rows"]}
@@ -261,7 +261,7 @@ def test_sweep_suite_artifact(tmp_path):
         modes=["minimal"], load_fractions=(0.5, 1.0))
     disk = json.loads((tmp_path / "sweep.json").read_text())
     assert disk["suite"] == "sweep"
-    assert disk["schema_version"] == 5
+    assert disk["schema_version"] == 6
     assert len(disk["rows"]) == 2 * 2  # 2 scenarios x 2 load levels
     for r in disk["rows"]:
         assert {"topology", "scenario", "mode", "engine", "offered_fraction",

@@ -290,7 +290,7 @@ def test_sweep_schema_v2_roundtrip_and_skips(tmp_path, capsys):
         modes=["minimal"], load_fractions=(0.5, 1.0))
     disk = json.loads((tmp_path / "sweep.json").read_text())
     assert disk == payload
-    assert disk["schema_version"] == 5
+    assert disk["schema_version"] == 6
     assert disk["params"]["n_routed_rows"] == 2
     assert disk["params"]["n_skipped"] == 1
     routed = [r for r in disk["rows"] if not r.get("skipped")]

@@ -413,7 +413,7 @@ def test_experiments_cli_trace_cosim_has_spans(tmp_path):
     # the artifacts written inside the recording scope carry the v5
     # telemetry block
     disk = json.loads(open(os.path.join(out, "cosim.json")).read())
-    assert disk["schema_version"] == 5
+    assert disk["schema_version"] == 6
     assert disk["telemetry"]["counters"]["cosim.phases"] > 0
 
 

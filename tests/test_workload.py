@@ -1,0 +1,379 @@
+"""Tests for the multi-tenant workload subsystem (repro.workload).
+
+Load-bearing pins: seeded determinism of every sampler and of the whole
+serving artifact (same seed -> byte-identical rows), byte conservation
+between request KV payloads and emitted flows, offered load matching
+the Poisson rate within statistical tolerance, the uncontended
+closed-form KV-transfer FCT at 1e-6, and tag-driven attribution through
+``sim/events.py`` (no index arithmetic anywhere).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.hyperx import MPHX
+from repro.core.netsim import make_router, gbps_to_Bps
+from repro.cosim.placement import rank_to_switch
+from repro.sim.events import (FlowSpec, flows_to_demands, path_latency,
+                              simulate_demands, simulate_flow_batches,
+                              simulate_flows, simulate_incidence)
+from repro.sim.fairshare import flow_incidence
+from repro.workload import (EMPIRICAL_CDFS, BackgroundTenantSpec,
+                            ServingTenantSpec, SizeDist,
+                            TrainingTenantSpec, build_serving_workload,
+                            kv_bytes_per_token, mean_size, mmpp_arrivals,
+                            poisson_arrivals, run_tenant_mix,
+                            sample_sizes, serving_ttft_s, slo_rows,
+                            tenant_mask, tenant_of)
+
+
+def _topo() -> MPHX:
+    return MPHX(n=2, p=8, dims=(8, 8))
+
+
+def _switch_of(topo):
+    return rank_to_switch(topo, None)
+
+
+# ------------------------------------------------------------ samplers ----
+
+
+@pytest.mark.parametrize("dist", [
+    SizeDist("fixed", mean=100.0),
+    SizeDist("lognormal", mean=800.0, sigma=1.0),
+    SizeDist("pareto", alpha=1.2, lo=128.0, hi=32768.0),
+    SizeDist("empirical", name="websearch"),
+    SizeDist("empirical", name="datamining"),
+    SizeDist("empirical", name="hadoop"),
+])
+def test_sampler_seeded_determinism(dist):
+    a = sample_sizes(dist, 500, np.random.default_rng(42))
+    b = sample_sizes(dist, 500, np.random.default_rng(42))
+    c = sample_sizes(dist, 500, np.random.default_rng(43))
+    np.testing.assert_array_equal(a, b)
+    if dist.kind != "fixed":
+        assert not np.array_equal(a, c)
+    assert (a > 0).all()
+
+
+@pytest.mark.parametrize("dist", [
+    SizeDist("lognormal", mean=1000.0, sigma=0.7),
+    SizeDist("pareto", alpha=1.5, lo=100.0, hi=1e6),
+    SizeDist("empirical", name="websearch"),
+])
+def test_sampler_mean_matches_analytic(dist):
+    # law of large numbers: the empirical mean approaches mean_size()
+    s = sample_sizes(dist, 200_000, np.random.default_rng(0))
+    assert s.mean() == pytest.approx(mean_size(dist), rel=0.05)
+
+
+def test_sampler_bounds():
+    d = SizeDist("pareto", alpha=1.1, lo=64.0, hi=4096.0)
+    s = sample_sizes(d, 10_000, np.random.default_rng(1))
+    assert s.min() >= 64.0 and s.max() <= 4096.0
+    for name, pts in EMPIRICAL_CDFS.items():
+        e = sample_sizes(SizeDist("empirical", name=name), 10_000,
+                         np.random.default_rng(2))
+        assert e.min() >= pts[0][0] and e.max() <= pts[-1][0]
+
+
+def test_sampler_unknown_kind_raises():
+    with pytest.raises(ValueError):
+        SizeDist("zipf")
+    with pytest.raises(ValueError):
+        SizeDist("empirical", name="nope")
+
+
+def test_poisson_rate_within_tolerance():
+    # offered load matches the Poisson rate: ~N(rate*T, rate*T), so a
+    # 5-sigma band around the expectation is a deterministic-seed-safe
+    # statistical check
+    rate, T = 2000.0, 2.0
+    arr = poisson_arrivals(rate, T, np.random.default_rng(3))
+    expect = rate * T
+    assert abs(arr.size - expect) < 5 * np.sqrt(expect)
+    assert (np.diff(arr) >= 0).all() and arr.min() >= 0 and arr.max() < T
+    a2 = poisson_arrivals(rate, T, np.random.default_rng(3))
+    np.testing.assert_array_equal(arr, a2)
+
+
+def test_mmpp_rate_and_burstiness():
+    rate, T = 2000.0, 4.0
+    arr = mmpp_arrivals(rate, T, np.random.default_rng(4), burstiness=6.0)
+    # long-run mean rate is preserved (looser band: dwell correlation)
+    assert arr.size == pytest.approx(rate * T, rel=0.25)
+    assert (np.diff(arr) >= 0).all() and arr.max() < T
+    # burstier than Poisson: variance of per-bin counts exceeds the mean
+    bins = np.histogram(arr, bins=int(T / 0.005))[0]
+    assert bins.var() > 1.5 * bins.mean()
+    # burstiness=1 degenerates to plain Poisson statistics
+    calm = mmpp_arrivals(rate, T, np.random.default_rng(5), burstiness=1.0)
+    cbins = np.histogram(calm, bins=int(T / 0.005))[0]
+    assert cbins.var() < 1.5 * cbins.mean()
+
+
+# ----------------------------------------------------- serving tenant ----
+
+
+def test_kv_bytes_per_token_accounting():
+    from repro.models.registry import get_config
+    cfg = get_config("mixtral-8x22b")
+    kv = kv_bytes_per_token(cfg)
+    assert kv == 2.0 * cfg.n_layers * cfg.n_kv_heads \
+        * cfg.resolved_head_dim * 2  # bfloat16
+
+
+def test_serving_byte_conservation():
+    # KV payload is conserved between requests and emitted flows + the
+    # intra-switch remainder
+    topo = _topo()
+    spec = ServingTenantSpec("t", rate_hz=400.0, duration_s=0.1,
+                             hotspot_fraction=0.3)
+    w = build_serving_workload(spec, _switch_of(topo), 0, topo.port_gbps,
+                               np.random.default_rng(7))
+    assert w.n_requests > 0
+    flow_bytes = sum(f.size_bytes for f in w.flows)
+    assert flow_bytes + w.intra_bytes == pytest.approx(
+        w.kv_bytes.sum(), rel=1e-12)
+    # every flow is tagged (tenant, request) and starts at the request's
+    # prefill-complete time
+    start_of = {r: float(w.kv_start_s[r]) for r in range(w.n_requests)}
+    for f in w.flows:
+        assert tenant_of(f.tag) == "t"
+        assert f.start_s == pytest.approx(start_of[f.tag[1]])
+
+
+def test_serving_workload_determinism():
+    topo = _topo()
+    spec = ServingTenantSpec("t", rate_hz=300.0, duration_s=0.1)
+    a = build_serving_workload(spec, _switch_of(topo), 0, topo.port_gbps,
+                               np.random.default_rng(11))
+    b = build_serving_workload(spec, _switch_of(topo), 0, topo.port_gbps,
+                               np.random.default_rng(11))
+    np.testing.assert_array_equal(a.arrival_s, b.arrival_s)
+    np.testing.assert_array_equal(a.kv_bytes, b.kv_bytes)
+    np.testing.assert_array_equal(a.decode_replica, b.decode_replica)
+    assert a.flows == b.flows
+
+
+def test_serving_hotspot_incast():
+    topo = _topo()
+    spec = ServingTenantSpec("t", rate_hz=2000.0, duration_s=0.1,
+                             decode_replicas=4, hotspot_fraction=0.9)
+    w = build_serving_workload(spec, _switch_of(topo), 0, topo.port_gbps,
+                               np.random.default_rng(13))
+    share = (w.decode_replica == 0).mean()
+    assert share > 0.8   # ~0.9 + 0.1/4 of requests pin to replica 0
+
+
+def test_serving_placement_overflow_raises():
+    topo = _topo()
+    spec = ServingTenantSpec("t", tp=topo.n_nics)   # cannot fit
+    with pytest.raises(ValueError):
+        build_serving_workload(spec, _switch_of(topo), 0, topo.port_gbps,
+                               np.random.default_rng(0))
+
+
+def test_closed_form_uncontended_kv_fct():
+    # a single uncontended request's KV-transfer FCT ==
+    # share_bytes / min(cap, bottleneck) + path alpha, exactly
+    topo = _topo()
+    router = make_router(topo, engine="array")
+    spec = ServingTenantSpec(
+        "pin", rate_hz=40.0, duration_s=0.05,
+        prompt_tokens=SizeDist("fixed", mean=1000.0),
+        prefill_replicas=1, decode_replicas=1, tp=topo.p)
+    w = build_serving_workload(spec, _switch_of(topo), 0, topo.port_gbps,
+                               np.random.default_rng(17))
+    assert len(w.flows) >= 1
+    f = w.flows[0]
+    share = f.size_bytes / topo.n_planes
+    cap = float(w.caps_gbps[0])
+    inc = flow_incidence(router, flows_to_demands([f]), "minimal")
+    res = simulate_incidence(inc, share, cap, start_s=f.start_s)
+    expected = (share / gbps_to_Bps(min(cap, float(
+        inc.bottleneck_gbps()[0]))) + float(path_latency(inc)[0]))
+    assert float(res.fct_s[0]) == pytest.approx(expected, rel=1e-6)
+
+
+# ------------------------------------------------------- tag threading ----
+
+
+def test_flowspec_tag_threads_through_simulate_flows():
+    topo = _topo()
+    router = make_router(topo, engine="array")
+    flows = [FlowSpec(0, 9, 1e6, tag=("a", 0)),
+             FlowSpec(1, 10, 2e6, tag=("b", 0)),
+             FlowSpec(2, 11, 1e6, tag=("a", 1))]
+    res = simulate_flows(router, flows)
+    assert res.tags is not None
+    assert [tenant_of(t) for t in res.tags] == ["a", "b", "a"]
+    np.testing.assert_array_equal(tenant_mask(res, "a"),
+                                  [True, False, True])
+    recs = res.flow_records()
+    assert recs[1]["tag"] == ("b", 0)
+    assert recs[1]["size_bytes"] == 2e6
+    # untagged flows -> no tags array, tag-dependent helpers refuse
+    res2 = simulate_flows(router, [FlowSpec(0, 9, 1e6)])
+    assert res2.tags is None
+    with pytest.raises(ValueError):
+        tenant_mask(res2, "a")
+
+
+def test_tags_do_not_perturb_simulation():
+    topo = _topo()
+    router = make_router(topo, engine="array")
+    plain = [FlowSpec(0, 9, 1e6), FlowSpec(1, 10, 2e6)]
+    tagged = [FlowSpec(0, 9, 1e6, tag="x"), FlowSpec(1, 10, 2e6, tag="y")]
+    a = simulate_flows(router, plain)
+    b = simulate_flows(router, tagged)
+    np.testing.assert_array_equal(a.fct_s, b.fct_s)
+    np.testing.assert_array_equal(a.edge_bytes, b.edge_bytes)
+
+
+def test_simulate_demands_per_tag_breakdown():
+    topo = _topo()
+    router = make_router(topo, engine="array")
+    dem = flows_to_demands([FlowSpec(0, 9, 1.0), FlowSpec(1, 10, 1.0),
+                            FlowSpec(2, 11, 1.0)])
+    dem = type(dem)(dem.src, dem.dst, np.full(3, 10.0))
+    row = simulate_demands(router, dem, 1e-4,
+                           tags=["a", "a", "b"])
+    assert set(row["per_tag"]) == {"a", "b"}
+    assert row["per_tag"]["a"]["flows"] == 2
+    assert row["per_tag"]["b"]["flows"] == 1
+    assert row["per_tag"]["a"]["fct_p50_us"] is not None
+    # no tags -> no per_tag key (v5 consumers see identical rows)
+    assert "per_tag" not in simulate_demands(router, dem, 1e-4)
+
+
+def test_simulate_flow_batches_carries_tags():
+    topo = _topo()
+    router = make_router(topo, engine="array")
+    batches = [[FlowSpec(0, 9, 1e6, tag=("t", 0))],
+               [FlowSpec(0, 9, 1e6, tag=("t", 1))]]
+    out = simulate_flow_batches(router, batches)
+    assert out.results[0].tags[0] == ("t", 0)
+    assert out.results[1].tags[0] == ("t", 1)
+
+
+def test_flow_span_tag_in_trace():
+    from repro.telemetry import TraceRecorder, recording
+    topo = _topo()
+    router = make_router(topo, engine="array")
+    rec = TraceRecorder()
+    with recording(rec):
+        simulate_flows(router, [FlowSpec(0, 9, 1e6, tag=("chat", 3))])
+    spans = [e for e in rec.events
+             if e.get("cat") == "flow" and "tag" in e.get("args", {})]
+    assert spans and spans[0]["args"]["tag"] == "('chat', 3)"
+
+
+# --------------------------------------------------------- tenant mix ----
+
+
+def _mix(seed=0, **kw):
+    specs = [
+        ServingTenantSpec("chat", rate_hz=200.0, duration_s=0.05),
+        TrainingTenantSpec("train", n_ranks=16),
+        # 16 NICs so the block spans two 8-port switches and actually
+        # emits fabric flows (an 8-NIC block would be all intra-switch)
+        BackgroundTenantSpec("web", rate_hz=1000.0, duration_s=0.05,
+                             n_nics=16),
+    ]
+    return run_tenant_mix(_topo(), specs, seed=seed, **kw)
+
+
+def test_tenant_mix_rows_and_attribution():
+    mix = _mix()
+    rows = slo_rows(mix)
+    assert [r["tenant"] for r in rows] == ["chat", "train", "web"]
+    assert {r["kind"] for r in rows} == {"serving", "training",
+                                         "background"}
+    for r in rows:
+        assert r["n_stalled"] == 0
+        assert r["fct_p50_us"] is not None
+        assert r["fct_p50_us"] <= r["fct_p99_us"] <= r["fct_p999_us"]
+        assert r["slowdown_mean"] >= 1.0 - 1e-9
+    chat = rows[0]
+    assert chat["n_requests"] > 0
+    assert chat["ttft_p50_us"] is not None
+    # TTFT includes prefill compute, so it dominates the bare fct
+    assert chat["ttft_p50_us"] > chat["fct_p50_us"]
+    # tag attribution partitions the mixed flows exactly
+    n = sum(int(tenant_mask(mix.mixed, t.name).sum())
+            for t in mix.traffic)
+    assert n == mix.mixed.size_bytes.shape[0]
+
+
+def test_tenant_mix_seed_determinism_and_sensitivity():
+    a = slo_rows(_mix(seed=0))
+    b = slo_rows(_mix(seed=0))
+    c = slo_rows(_mix(seed=1))
+    assert a == b
+    assert a != c
+
+
+def test_tenant_mix_ttft_validity():
+    mix = _mix()
+    ttft, valid = serving_ttft_s(mix, "chat")
+    w = mix.tenant("chat").serving
+    assert ttft.shape == (w.n_requests,)
+    assert valid.all()
+    # TTFT >= prefill compute delay for every request
+    assert (ttft[valid] >= (w.kv_start_s - w.arrival_s)[valid] - 1e-12).all()
+
+
+def test_tenant_mix_overflow_is_value_error():
+    topo = MPHX(n=2, p=2, dims=(2, 2))   # 8 NICs total
+    with pytest.raises(ValueError):
+        run_tenant_mix(topo, [TrainingTenantSpec("big", n_ranks=16)])
+
+
+# ------------------------------------------------------ serving suite ----
+
+
+def test_serving_suite_artifact(tmp_path):
+    import json
+    from repro.experiments import run_serving_suite
+
+    p1 = run_serving_suite(str(tmp_path / "a"), seed=0, duration_ms=20.0)
+    p2 = run_serving_suite(str(tmp_path / "b"), seed=0, duration_ms=20.0)
+    assert p1["schema_version"] == 6
+    assert p1 == p2   # same seed, same payload
+    assert (tmp_path / "a" / "serving.json").exists()
+    assert (tmp_path / "a" / "serving.md").exists()
+    disk = json.loads((tmp_path / "a" / "serving.json").read_text())
+    assert disk["schema_version"] == 6
+    assert disk["suite"] == "serving"
+    assert disk["params"]["seed"] == 0
+    assert disk["params"]["n_skipped"] == 0
+    topos = {r["topology"] for r in disk["rows"]}
+    assert topos == {"mphx-2p-8x8", "ft3-small", "dragonfly-small"}
+    for r in disk["rows"]:
+        assert not r.get("skipped")
+        assert "fct_p50_us" in r and "fct_p999_us" in r
+        if r["kind"] == "serving":
+            assert "ttft_p99_us" in r
+
+
+def test_serving_suite_skip_record(tmp_path):
+    from repro.experiments.servesuite import run_serving_suite
+    # the default tenant mix needs 40 NICs; mpft-2p-small has only 32,
+    # which must yield an explicit skip record instead of a crash
+    payload = run_serving_suite(str(tmp_path),
+                                topo_names=["mpft-2p-small"],
+                                seed=0, duration_ms=10.0)
+    assert payload["params"]["n_skipped"] == 1
+    row = payload["rows"][0]
+    assert row["skipped"] and "NIC" in row["reason"] \
+        or "needs" in row["reason"]
+
+
+def test_serving_cli(tmp_path):
+    from repro.experiments.run import main
+    rc = main(["--suite", "serving", "--out", str(tmp_path),
+               "--topos", "mphx-2p-8x8", "--tenants", "chat", "train",
+               "--seed", "3", "--serving-duration-ms", "10"])
+    assert rc == 0
+    assert (tmp_path / "serving.json").exists()
