@@ -11,6 +11,7 @@ quantity's latency in us where the bench IS a latency model).
   collectives — JAX multi-plane collective equivalence + wall time
   cosim       — training-step co-sim on the fabric     (§6 future work)
   serving     — multi-tenant serving SLOs per fabric   (§6 future work)
+  reroute     — local vs global failure recovery gap   (resilience)
   spray       — NIC plane-spraying efficiency model    (§2)
   roofline    — per (arch x shape) roofline terms from the dry-run
 """
@@ -816,6 +817,159 @@ def bench_serving():
          f"runs_agree={'yes' if record['runs_agree'] else 'NO'}")
 
 
+def bench_reroute():
+    """Fast-reroute under failure: precomputed-backup local reroute vs
+    global reconvergence on MPHX and the Table-2 baseline fabrics.
+
+    Pins, per fabric and reroute mode, (a) byte conservation
+    (``injected == delivered + stalled``) and zero load on failed
+    elements at 1e-9, and (b) the recovery gap — local backup-path
+    reroute must reach 90% of healthy throughput strictly faster than
+    the global recompute (best-of-``REPEATS`` walls; per-phase recovery
+    walls stay on the artifact rows).  Also pins flowlet-spray
+    stability: killing a plane re-hashes only the flowlets that were on
+    it.  Writes results/BENCH_reroute.json."""
+    from repro.experiments.scenarios import SCENARIOS
+    from repro.experiments.sweep import SWEEP_TOPOLOGIES
+    from repro.routing import ProtectedRouter
+    from repro.sim.failures import (DegradedGraph, degrade_graph,
+                                    parse_failure_spec, recovery_curve,
+                                    time_to_recover)
+    from repro.sim.spray import flowlet_split
+
+    TOL = 1e-9
+    REPEATS = 3
+    N_LAYERS = 8
+    SPEC = "link:0.05"
+    # reconvergence re-routes with the production mode (the failures
+    # suite default): UGAL-adaptive — its relaxation cost is part of
+    # the global recovery wall the local table-lookup path avoids
+    MODE = "adaptive"
+    OFFERED_FRACTION = 0.5
+    fabrics = ["mphx-2p-8x8", "ft3-small", "dragonfly-small",
+               "dfplus-small"]
+    spec = parse_failure_spec(SPEC)
+    build = SCENARIOS["uniform"].build
+    record = {"schema_version": 1, "bench": "reroute", "spec": SPEC,
+              "offered_fraction": OFFERED_FRACTION,
+              "mode": MODE,
+              "protection_layers": N_LAYERS, "repeats": REPEATS,
+              "tolerance": TOL, "cells": []}
+    for tn in fabrics:
+        topo = SWEEP_TOPOLOGIES[tn]
+        offered = OFFERED_FRACTION * topo.nic_bw_gbps
+        g = topo.build_graph()
+        prot, prov_us = timed(
+            lambda t=topo: ProtectedRouter(t, n_layers=N_LAYERS))
+        _, bnh_us = timed(prot.backup_next_hops)
+        dem = build(topo, offered, graph=g)
+        dg = degrade_graph(g, spec)
+        # -- pin (a): conservation + no load on failed elements --------
+        # local reroute: loads live on healthy edge ids, so dead edges
+        # are directly checkable (shared by the local and global modes)
+        lr = prot.local_reroute_loads(dem, dg)
+        surv_mult, _, _ = prot._degraded_state(dg)
+        dead_load = float(np.abs(lr.loads[surv_mult <= 0]).max()) \
+            if (surv_mult <= 0).any() else 0.0
+        # global recompute: route the rebuilt demands on the degraded
+        # graph through the same accounting pull (identity failure
+        # state), and check the survivor graph is structurally free of
+        # failed elements mapped back to healthy ids
+        dem_deg = build(topo, offered, graph=dg.graph)
+        prot_deg = ProtectedRouter(dg.graph, n_layers=2)
+        n_deg = dg.graph.n_switches
+        dg0 = DegradedGraph(dg.graph,
+                            np.arange(n_deg, dtype=np.int64),
+                            [], 0.0, [], dg.graph.total_links())
+        lg = prot_deg.local_reroute_loads(dem_deg, dg0)
+        inv = {int(dg.node_map[u]): u for u in range(len(dg.node_map))
+               if dg.node_map[u] >= 0}
+        gone = {tuple(e) for e in dg.fully_failed_edges}
+        dead_sw = set(dg.failed_switches)
+        structural_bad = 0
+        for e in range(prot_deg.csr.n_edges):
+            u = inv[int(prot_deg.csr.src[e])]
+            v = inv[int(prot_deg.csr.dst[e])]
+            if (min(u, v), max(u, v)) in gone or u in dead_sw \
+                    or v in dead_sw:
+                structural_bad += 1
+        conservation_ok = bool(lr.conservation_residual < TOL
+                               and lg.conservation_residual < TOL
+                               and lg.stalled_share < TOL)
+        no_dead_load_ok = bool(dead_load < TOL and structural_bad == 0)
+        # -- pin (b): measured local-vs-global recovery gap ------------
+        t90, curves = {}, {}
+        for rm in ("none", "local", "global"):
+            best, best_rows = None, None
+            for _ in range(REPEATS):
+                rows = recovery_curve(
+                    topo, lambda t, o, gg: build(t, o, graph=gg), spec,
+                    offered, mode=MODE, reroute=rm,
+                    protection=prot if rm != "none" else None)
+                t = time_to_recover(rows)
+                if t is not None and (best is None or t < best):
+                    best, best_rows = t, rows
+            t90[rm], curves[rm] = best, best_rows
+        # faster means: local recovers, and either strictly sooner than
+        # the global recompute or the recompute never reaches 90% at all
+        local_faster = (t90["local"] is not None
+                        and (t90["none"] is None
+                             or t90["local"] < t90["none"]))
+        cell = {
+            "topology": tn, "is_mphx": tn.startswith("mphx"),
+            "protection_coverage": round(prot.protection_coverage(), 6),
+            "provision_wall_s": round((prov_us + bnh_us) / 1e6, 6),
+            "conservation_residual_local": lr.conservation_residual,
+            "conservation_residual_global": lg.conservation_residual,
+            "max_dead_edge_load_gbps": dead_load,
+            "structural_failed_elements": structural_bad,
+            "conservation_ok": conservation_ok,
+            "no_dead_load_ok": no_dead_load_ok,
+            "t90_none_s": t90["none"], "t90_local_s": t90["local"],
+            "t90_global_s": t90["global"],
+            "recovery_gap_s": round(t90["none"] - t90["local"], 6)
+            if local_faster and t90["none"] is not None else None,
+            "local_faster_ok": bool(local_faster),
+            "recovery_curves": curves,
+        }
+        record["cells"].append(cell)
+        emit(f"reroute/{tn}",
+             (t90["local"] or 0.0) * 1e6,
+             f"t90_local_s={t90['local']};t90_none_s={t90['none']};"
+             f"conserved={'yes' if conservation_ok else 'NO'};"
+             f"dead_load={'0' if no_dead_load_ok else 'NONZERO'};"
+             f"local_faster={'yes' if local_faster else 'NO'}")
+    # flowlet stability: kill one plane, only its flowlets move
+    rng = np.random.default_rng(7)
+    sizes = rng.uniform(4096, 8e6, 512)
+    healthy_b, _ = flowlet_split(sizes, 4, 1 << 17, seed=7)
+    alive = np.array([True, True, False, True])
+    dead_b, _ = flowlet_split(sizes, 4, 1 << 17, seed=7, alive=alive)
+    stable = bool((dead_b[:, alive] >= healthy_b[:, alive] - 1e-9).all()
+                  and dead_b[:, 2].sum() == 0.0
+                  and np.allclose(dead_b.sum(axis=1), sizes))
+    record["flowlet_stability_ok"] = stable
+    cells = record["cells"]
+    record["conservation_ok"] = all(c["conservation_ok"] for c in cells)
+    record["no_dead_load_ok"] = all(c["no_dead_load_ok"] for c in cells)
+    mphx_faster = [c for c in cells
+                   if c["is_mphx"] and c["local_faster_ok"]]
+    base_faster = [c for c in cells
+                   if not c["is_mphx"] and c["local_faster_ok"]]
+    record["local_faster_ok"] = bool(mphx_faster and len(base_faster) >= 2)
+    out = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "BENCH_reroute.json")
+    with open(path, "w") as fh:
+        json.dump(record, fh, indent=2)
+        fh.write("\n")
+    emit("reroute/summary", 0.0,
+         f"conservation={'yes' if record['conservation_ok'] else 'NO'};"
+         f"no_dead_load={'yes' if record['no_dead_load_ok'] else 'NO'};"
+         f"local_faster={'yes' if record['local_faster_ok'] else 'NO'};"
+         f"flowlet_stable={'yes' if stable else 'NO'}")
+
+
 # --------------------------------------------------- experiment suites ----
 
 
@@ -838,6 +992,7 @@ BENCHES = {
     "sim-scale": bench_sim_scale,
     "cosim": bench_cosim,
     "serving": bench_serving,
+    "reroute": bench_reroute,
     "experiments": bench_experiments,
     "diameter": bench_diameter,
     "flattening": bench_flattening,

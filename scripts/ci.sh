@@ -90,3 +90,37 @@ if [[ "${SKIP_COSIM_SMOKE:-0}" != "1" ]]; then
         --trace "$COSIM_SMOKE_OUT/trace.json"
     rm -rf "$COSIM_SMOKE_OUT"
 fi
+
+if [[ "${SKIP_REROUTE_SMOKE:-0}" != "1" ]]; then
+    # fast-reroute determinism smoke: the failures suite in all three
+    # reroute modes, twice with the same fixed seed — the steady-state
+    # rows must be identical (only measured wall-clock fields may
+    # differ between runs)
+    REROUTE_SMOKE_OUT="$(mktemp -d)"
+    for run in a b; do
+        python -m repro.experiments.run --suite failures \
+            --topos mphx-2p-8x8 --scenarios uniform \
+            --failures link:0.01,plane:1 \
+            --reroute-modes none local global \
+            --out "$REROUTE_SMOKE_OUT/$run"
+    done
+    python - "$REROUTE_SMOKE_OUT" <<'PY'
+import json, sys
+WALLS = {"phase_wall_s", "t_offset_s", "sim_wall_s", "time_to_90_s"}
+def strip(o):
+    if isinstance(o, dict):
+        return {k: strip(v) for k, v in o.items() if k not in WALLS}
+    if isinstance(o, list):
+        return [strip(v) for v in o]
+    return o
+out = sys.argv[1]
+a = strip(json.load(open(f"{out}/a/failures.json")))
+b = strip(json.load(open(f"{out}/b/failures.json")))
+a.pop("telemetry", None); b.pop("telemetry", None)
+assert a == b, "reroute smoke: steady-state rows differ between runs"
+modes = {r["reroute"] for r in a["rows"] if r.get("kind") == "recovery"}
+assert modes == {"none", "local", "global"}, modes
+print("reroute smoke: deterministic across runs, all three modes present")
+PY
+    rm -rf "$REROUTE_SMOKE_OUT"
+fi

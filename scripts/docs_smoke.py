@@ -26,6 +26,7 @@ DEFAULT_DOCS = [
     os.path.join("docs", "cosim.md"),
     os.path.join("docs", "observability.md"),
     os.path.join("docs", "serving.md"),
+    os.path.join("docs", "resilience.md"),
 ]
 
 

@@ -1,10 +1,10 @@
 """JSON + markdown artifact writers for experiment suites.
 
-Artifact schema (``schema_version`` 6):
+Artifact schema (``schema_version`` 7):
 
 ```json
 {
-  "schema_version": 6,
+  "schema_version": 7,
   "suite": "table2" | "sweep" | "sim" | "failures" | "cosim" | "serving",
   "generated_by": "repro.experiments",
   "params": { ... suite parameters ... },
@@ -19,6 +19,16 @@ table, for review in PRs).
 
 Schema history:
 
+* **v7** — ``failures`` recovery rows gain a ``reroute`` column (one
+  curve per requested reroute mode: ``none`` = global recompute,
+  ``local`` = precomputed-backup fast reroute from
+  ``repro.routing.protection``, ``global`` = local bridge + full
+  reconvergence; ``local``/``global`` curves add a ``local_reroute``
+  phase with ``diverted_gbps`` / ``conservation_residual``, ``global``
+  ends in a ``reconverged`` phase), and each cell adds per-mode
+  ``recovery_summary`` rows with the measured ``time_to_90_s`` and
+  ``protection_coverage``; ``failures`` params gain ``reroute_modes`` /
+  ``protection_layers``.  All other suites' columns are unchanged.
 * **v6** — new ``serving`` suite from the multi-tenant workload
   generator (``repro.workload``): one row per (topology, tenant) with
   measured per-tenant ``fct_p50_us`` / ``fct_p99_us`` / ``fct_p999_us``,
@@ -75,7 +85,7 @@ import json
 import os
 from typing import Sequence
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 
 def artifact_payload(suite: str, params: dict, rows: list[dict]) -> dict:

@@ -36,6 +36,7 @@ import argparse
 import sys
 from contextlib import nullcontext
 
+from repro.routing.protection import REROUTE_MODES
 from repro.sim.failures import parse_failure_spec
 from .cosuite import (DEFAULT_COSIM_CONFIGS, DEFAULT_COSIM_RANKS,
                       DEFAULT_COSIM_TOPOS, run_cosim_suite)
@@ -110,6 +111,15 @@ def build_parser() -> argparse.ArgumentParser:
                    choices=["minimal", "valiant", "adaptive"],
                    default="adaptive",
                    help="routing mode for degraded-fabric re-routing")
+    p.add_argument("--reroute-modes", nargs="+", default=None,
+                   choices=list(REROUTE_MODES), metavar="MODE",
+                   help="recovery-curve reroute modes for the failures "
+                   "suite: none (global recompute), local (precomputed "
+                   "backup paths, no BFS), global (local bridge + full "
+                   "reconvergence); default: all three")
+    p.add_argument("--protection-layers", type=int, default=4,
+                   help="FatPaths/MRC protection layers for "
+                   "local/global reroute modes (default 4)")
     p.add_argument("--config", nargs="+", default=None, metavar="ARCH",
                    help="cosim suite: model configs to co-simulate "
                    "(underscores normalize to the registry's hyphenated "
@@ -268,7 +278,9 @@ def _run_suites(args, specs, rec=None) -> int:
             args.out, topo_names=args.topos,
             scenario_names=args.scenarios, failure_specs=specs,
             offered_fraction=args.failure_load, mode=args.failure_mode,
-            backend=args.backend, engine=args.engine)
+            backend=args.backend, engine=args.engine,
+            reroute_modes=args.reroute_modes,
+            protection_layers=args.protection_layers)
         print(f"failures: {payload['params']['n_rows']} rows, "
               f"{payload['params']['n_skipped']} skipped -> "
               f"{args.out}/failures.json, {args.out}/failures.md")

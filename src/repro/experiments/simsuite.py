@@ -7,10 +7,14 @@
   rows (:mod:`repro.sim.collective_sim`).
 * :func:`run_failures_suite` — degraded-fabric sweeps: for each
   (topology, failure spec, scenario), healthy-vs-degraded throughput and
-  the three-phase recovery curve (:mod:`repro.sim.failures`).  Topologies
-  whose engine lacks re-route support (forced ``--engine array``, or no
-  explicit switch graph) produce explicit skip records, never silent
-  drops.
+  the recovery curve in every requested reroute mode — ``none`` (global
+  recompute), ``local`` (precomputed-backup fast reroute via
+  :mod:`repro.routing.protection`), ``global`` (local bridge + full
+  reconvergence) — plus per-mode ``recovery_summary`` rows with the
+  measured time-to-90%-throughput (:mod:`repro.sim.failures`).
+  Topologies whose engine lacks re-route support (forced ``--engine
+  array``, or no explicit switch graph) produce explicit skip records,
+  never silent drops.
 
 Both write schema-v3 JSON + markdown artifacts
 (:mod:`~repro.experiments.artifacts`).
@@ -25,8 +29,11 @@ import time
 from repro.core.netsim import load_sweep, make_router, resolve_engine
 from repro.core.topology import Topology
 from repro.sim.collective_sim import SIM_COLLECTIVES, simulate_collective
+from repro.routing.protection import ProtectedRouter, REROUTE_MODES, \
+    validate_reroute_mode
 from repro.sim.failures import (FailureSpec, failure_throughput,
-                                parse_failure_spec, recovery_curve)
+                                parse_failure_spec, recovery_curve,
+                                time_to_recover)
 from repro.sim.fairshare import flow_incidence
 from .artifacts import (artifact_payload, markdown_table, write_json,
                         write_markdown)
@@ -210,9 +217,19 @@ def run_failures_suite(outdir: str = DEFAULT_OUTDIR,
                        offered_fraction: float = 0.5,
                        mode: str = "adaptive",
                        backend: str = "auto",
-                       engine: str = "auto") -> dict:
+                       engine: str = "auto",
+                       reroute_modes: "list[str] | None" = None,
+                       protection_layers: int = 4) -> dict:
     """Degraded-fabric sweep over (topology, failure spec, scenario) and
     write ``failures.json`` / ``failures.md``.
+
+    Each routable cell yields one ``throughput`` row, ``recovery`` rows
+    per phase of every mode in ``reroute_modes`` (default: all of
+    ``none`` / ``local`` / ``global``), and one ``recovery_summary`` row
+    per mode carrying the measured ``time_to_90_s``.  One
+    :class:`~repro.routing.protection.ProtectedRouter` with
+    ``protection_layers`` layers is provisioned per topology and shared
+    across its specs/scenarios (as a real fabric would).
 
     Degraded fabrics re-route on the generic graph engine; a forced
     ``engine="array"`` (no re-route support) or a topology without an
@@ -222,6 +239,8 @@ def run_failures_suite(outdir: str = DEFAULT_OUTDIR,
     scenario_names = scenario_names or ["uniform"]
     specs = [parse_failure_spec(s) if isinstance(s, str) else s
              for s in (failure_specs or DEFAULT_FAILURE_SPECS)]
+    modes = [validate_reroute_mode(m)
+             for m in (reroute_modes or list(REROUTE_MODES))]
     rows = []
     for tn in names:
         topo = SWEEP_TOPOLOGIES[tn]
@@ -243,6 +262,12 @@ def run_failures_suite(outdir: str = DEFAULT_OUTDIR,
             rows.append({"topology": topo.name, "failures": "*",
                          "skipped": True, "reason": str(e)})
             continue
+        protection = None
+        if any(m != "none" for m in modes):
+            # provisioned once per fabric, shared across specs/scenarios
+            protection = ProtectedRouter(topo, n_layers=protection_layers,
+                                         backend=backend)
+            protection.backup_next_hops()
         for spec in specs:
             if spec.planes_down >= topo.n_planes:
                 rows.append({"topology": topo.name,
@@ -276,10 +301,15 @@ def run_failures_suite(outdir: str = DEFAULT_OUTDIR,
                     ft = failure_throughput(topo, build, spec, offered,
                                             mode=mode, backend=backend)
                     ft_wall = time.perf_counter() - t0
-                    phases = recovery_curve(topo, build, spec, offered,
-                                            mode=mode, backend=backend,
-                                            throughput_row=ft,
-                                            reroute_wall_s=ft_wall)
+                    curves = {}
+                    for rm in modes:
+                        curves[rm] = recovery_curve(
+                            topo, build, spec, offered, mode=mode,
+                            backend=backend, throughput_row=ft,
+                            reroute_wall_s=ft_wall, reroute=rm,
+                            protection=protection
+                            if rm != "none" else None,
+                            n_layers=protection_layers)
                 except ValueError as e:
                     # survivors disconnected: an explicit skip record
                     # (no silent drops), flagged so it lands in the
@@ -295,17 +325,33 @@ def run_failures_suite(outdir: str = DEFAULT_OUTDIR,
                              "kind": "throughput",
                              "offered_fraction": offered_fraction,
                              **ft, "sim_wall_s": dt})
-                for ph in phases:
-                    rows.append({"topology": topo.name,
-                                 "failures": spec.label(),
-                                 "scenario": name, "kind": "recovery",
-                                 "mode": mode, **ph})
+                for rm, phases in curves.items():
+                    for ph in phases:
+                        rows.append({"topology": topo.name,
+                                     "failures": spec.label(),
+                                     "scenario": name, "kind": "recovery",
+                                     "mode": mode, **ph})
+                    summary = {"topology": topo.name,
+                               "failures": spec.label(),
+                               "scenario": name,
+                               "kind": "recovery_summary", "mode": mode,
+                               "reroute": rm,
+                               "time_to_90_s": time_to_recover(phases),
+                               "recovered_delivered_fraction":
+                                   phases[-1].get("delivered_fraction"),
+                               "n_phases": len(phases)}
+                    if rm != "none":
+                        summary["protection_layers"] = protection_layers
+                        summary["protection_coverage"] = round(
+                            protection.protection_coverage(), 6)
+                    rows.append(summary)
     routed = [r for r in rows if not r.get("skipped")]
     payload = artifact_payload(
         "failures",
         {"topologies": names, "scenarios": scenario_names,
          "failure_specs": [s.label() for s in specs],
          "offered_fraction": offered_fraction, "mode": mode,
+         "reroute_modes": modes, "protection_layers": protection_layers,
          "backend": backend, "engine": engine,
          "n_rows": len(routed),
          "n_skipped": sum(1 for r in rows if r.get("skipped"))},
@@ -325,9 +371,15 @@ def run_failures_suite(outdir: str = DEFAULT_OUTDIR,
         ("Recovery phases",
          markdown_table([r for r in routed
                          if r.get("kind") == "recovery"],
-                        ["topology", "failures", "scenario", "phase",
-                         "delivered_fraction", "stalled_share",
+                        ["topology", "failures", "scenario", "reroute",
+                         "phase", "delivered_fraction", "stalled_share",
                          "max_util", "t_offset_s", "phase_wall_s"])),
+        ("Recovery summary (local vs global time-to-90%)",
+         markdown_table([r for r in routed
+                         if r.get("kind") == "recovery_summary"],
+                        ["topology", "failures", "scenario", "reroute",
+                         "time_to_90_s", "recovered_delivered_fraction",
+                         "protection_coverage"])),
     ]
     skipped = [r for r in rows if r.get("skipped")]
     if skipped:

@@ -1,0 +1,14 @@
+"""repro.routing — routing resilience layers on top of the core engines.
+
+:mod:`.protection` is the fast-reroute subsystem: FatPaths-style layered
+multipath over any :class:`~repro.core.routing_graph.CSRGraph` plus
+MRC-style precomputed backup next-hop tables, so degraded fabrics can
+reroute *locally* (table lookups, no BFS) instead of waiting for a
+global reconvergence.  ``docs/resilience.md`` is the guide.
+"""
+
+from .protection import (LocalRerouteResult, ProtectedRouter,
+                         REROUTE_MODES, validate_reroute_mode)
+
+__all__ = ["LocalRerouteResult", "ProtectedRouter", "REROUTE_MODES",
+           "validate_reroute_mode"]

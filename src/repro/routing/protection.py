@@ -1,0 +1,501 @@
+"""Fast reroute under failure: layered multipath + precomputed backups.
+
+Two resilience mechanisms from the literature, built over any
+:class:`~repro.core.routing_graph.CSRGraph`:
+
+* **FatPaths-style routing layers** (Besta et al.) — ``n_layers`` copies
+  of the fabric, each a deterministic subgraph of the full multigraph.
+  Layer 0 is the primary (every edge); protection layer ``l >= 1``
+  excludes the undirected edges assigned to it round-robin (edge ``uid``
+  is excluded from layer ``1 + uid % (n_layers - 1)``), plus an optional
+  seeded ``rho`` subsample for extra path diversity.  Minimal routing
+  *within* a layer is loop-free by construction (distances strictly
+  decrease), and because every edge is excluded from exactly one
+  protection layer, that layer can always carry traffic around it.
+* **MRC-style precomputed backup next-hops** (maximally redundant
+  cover / SRv6 fast-reroute) — for every directed edge ``e = (u -> v)``
+  and destination ``d``, :meth:`ProtectedRouter.backup_next_hops` holds
+  the first hop out of ``u`` toward ``d`` in the layer protecting ``e``.
+  The table is computed from the per-layer BFS distances *before* any
+  failure, so when ``e`` dies the reroute is a table lookup — no BFS, no
+  graph rebuild, no reconvergence.
+
+:meth:`ProtectedRouter.local_reroute_loads` is the measured consequence:
+given a healthy demand matrix and a
+:class:`~repro.sim.failures.DegradedGraph`, it propagates traffic over
+the *stale* healthy shortest-path DAG, renormalizing each node's ECMP
+split over surviving downhill edges (local ECMP sibling reroute) and
+diverting shares with no surviving downhill edge into the failed edge's
+protection layer (the MRC switch-over).  Shares that exhaust
+``max_redirects`` layer switches, enter a layer that cannot reach the
+destination, or originate/terminate at dead switches are *stalled* —
+they wait for global reconvergence, and the result accounts for them
+explicitly: ``injected == delivered + stalled`` to 1e-9, and no load is
+ever placed on a failed element (both pinned by
+``results/BENCH_reroute.json``).
+
+Everything here is numpy: protection state is precomputed once per
+fabric at suite scale (the 65K presets route on the jit engines and do
+not build protection tables by default).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.routing_graph import CSRGraph, GraphLinkLoads, GraphRouter
+from repro.core.routing_vec import DemandArrays
+from repro.core.topology import SwitchGraph, Topology
+from repro.telemetry import get_metrics
+
+REROUTE_MODES = ("none", "local", "global")
+
+
+def validate_reroute_mode(mode: str) -> str:
+    if mode not in REROUTE_MODES:
+        raise ValueError(f"unknown reroute mode {mode!r}; expected one of "
+                         f"{REROUTE_MODES}")
+    return mode
+
+
+def _masked_hops(csr: CSRGraph, edge_mask: np.ndarray) -> np.ndarray:
+    """(S, S) hop distances over the masked edge set via batched frontier
+    BFS; ``-1`` marks unreachable pairs (masked layers may disconnect —
+    callers treat unreachable as "this layer cannot protect the pair")."""
+    S = csr.n_switches
+    adj = np.zeros((S, S), dtype=np.float32)
+    adj[csr.src[edge_mask], csr.dst[edge_mask]] = 1.0
+    frontier = np.eye(S, dtype=bool)
+    visited = frontier.copy()
+    dist = np.full((S, S), -1, dtype=np.int32)
+    np.fill_diagonal(dist, 0)
+    d = 0
+    while True:
+        d += 1
+        nxt = ((frontier.astype(np.float32) @ adj) > 0) & ~visited
+        if not nxt.any():
+            break
+        dist[nxt] = d
+        visited |= nxt
+        frontier = nxt
+    return dist
+
+
+class LocalRerouteResult:
+    """Load accounting of one precomputed-backup local reroute.
+
+    ``loads`` lives on the HEALTHY directed-edge ids (zero on every
+    failed edge by construction); ``cap_deg`` is the surviving capacity
+    of each healthy edge (zero where fully failed, reduced on degraded
+    trunks).  ``injected == delivered + stalled`` to float precision.
+    """
+
+    def __init__(self, loads, cap_deg, injected_gbps, delivered_gbps,
+                 stalled_gbps, diverted_gbps, layer_gbps, n_pulls):
+        self.loads = loads
+        self.cap_deg = cap_deg
+        self.injected_gbps = injected_gbps
+        self.delivered_gbps = delivered_gbps
+        self.stalled_gbps = stalled_gbps
+        self.diverted_gbps = diverted_gbps
+        self.layer_gbps = layer_gbps          # (L,) gbps entering each layer
+        self.n_pulls = n_pulls
+
+    @property
+    def delivered_share(self) -> float:
+        return self.delivered_gbps / self.injected_gbps \
+            if self.injected_gbps else 1.0
+
+    @property
+    def stalled_share(self) -> float:
+        return self.stalled_gbps / self.injected_gbps \
+            if self.injected_gbps else 0.0
+
+    @property
+    def conservation_residual(self) -> float:
+        """|injected - delivered - stalled| / injected (0 when idle)."""
+        if not self.injected_gbps:
+            return 0.0
+        return abs(self.injected_gbps - self.delivered_gbps
+                   - self.stalled_gbps) / self.injected_gbps
+
+    def max_utilization(self) -> float:
+        with np.errstate(divide="ignore", invalid="ignore"):
+            u = np.where(self.cap_deg > 0, self.loads / self.cap_deg, 0.0)
+        return float(u.max()) if u.size else 0.0
+
+    def saturation_throughput(self) -> float:
+        mx = self.max_utilization()
+        return 1.0 if mx == 0 else min(1.0, 1.0 / mx)
+
+    def info(self) -> dict:
+        return {
+            "delivered_share": round(self.delivered_share, 6),
+            "stalled_share": round(self.stalled_share, 6),
+            "diverted_gbps": round(self.diverted_gbps, 6),
+            "conservation_residual": self.conservation_residual,
+            "max_util": round(self.max_utilization(), 6),
+        }
+
+
+class ProtectedRouter:
+    """A :class:`GraphRouter` plus precomputed protection state.
+
+    Construction cost (the part a real fabric pays at *provisioning*
+    time, not at failure time): one BFS per layer plus the backup
+    next-hop table — recorded in the ``protection.build_wall_s`` timer.
+    """
+
+    def __init__(self, topo_or_graph: "Topology | SwitchGraph | GraphRouter",
+                 n_layers: int = 4, rho: float = 1.0, seed: int = 0,
+                 backend: str = "auto", dst_chunk: "int | None" = None):
+        if n_layers < 2:
+            raise ValueError("protection needs n_layers >= 2 "
+                             "(layer 0 is the primary)")
+        if not (0.0 < rho <= 1.0):
+            raise ValueError("rho must be in (0, 1]")
+        t0 = time.perf_counter()
+        if isinstance(topo_or_graph, GraphRouter):
+            self.router = topo_or_graph
+        else:
+            self.router = GraphRouter(topo_or_graph, backend=backend)
+        self.graph = self.router.graph
+        self.csr = self.router.csr
+        self.n_layers = n_layers
+        self.rho = rho
+        self.seed = seed
+        csr = self.csr
+        E, S = csr.n_edges, csr.n_switches
+        if dst_chunk is None:
+            dst_chunk = max(1, int(8e6 // max(E, 1)))
+        self.dst_chunk = dst_chunk
+        # undirected edge ids (both directions of a physical edge share one)
+        lo = np.minimum(csr.src, csr.dst)
+        hi = np.maximum(csr.src, csr.dst)
+        upairs, uid = np.unique(np.stack([lo, hi], axis=1), axis=0,
+                                return_inverse=True)
+        self.n_uedges = int(upairs.shape[0])
+        protect_u = 1 + (np.arange(self.n_uedges) % (n_layers - 1))
+        # layer that PROTECTS each directed edge (== the layer excluding it)
+        self.protect_layer = protect_u[uid].astype(np.int32)       # (E,)
+        self.layer_mask = np.ones((n_layers, E), dtype=bool)
+        for l in range(1, n_layers):
+            self.layer_mask[l] = self.protect_layer != l
+        if rho < 1.0:
+            rng = np.random.default_rng(seed)
+            for l in range(1, n_layers):
+                drop_u = rng.random(self.n_uedges) >= rho
+                self.layer_mask[l] &= ~drop_u[uid]
+        self._hops: "list[np.ndarray | None]" = [None] * n_layers
+        self._bnh: "np.ndarray | None" = None
+        mx = get_metrics()
+        mx.inc("protection.routers_built")
+        mx.observe("protection.build_wall_s", time.perf_counter() - t0)
+
+    # ----------------------------------------------------------- layers ----
+
+    def layer_hops(self, layer: int) -> np.ndarray:
+        """(S, S) hop distances within ``layer`` (lazy, cached; -1 =
+        unreachable in this layer)."""
+        if self._hops[layer] is None:
+            t0 = time.perf_counter()
+            self._hops[layer] = _masked_hops(self.csr,
+                                             self.layer_mask[layer])
+            mx = get_metrics()
+            mx.inc("protection.layer_bfs")
+            mx.observe("protection.layer_bfs_wall_s",
+                       time.perf_counter() - t0)
+        return self._hops[layer]
+
+    def layer_connected(self, layer: int) -> bool:
+        return bool((self.layer_hops(layer) >= 0).all())
+
+    def connected_layers(self) -> "list[int]":
+        return [l for l in range(self.n_layers) if self.layer_connected(l)]
+
+    def layer_edge_counts(self) -> np.ndarray:
+        """(L,) directed edges present in each layer."""
+        return self.layer_mask.sum(axis=1)
+
+    # ------------------------------------------------ backup next-hops ----
+
+    def _first_downhill_table(self, layer: int) -> np.ndarray:
+        """(S, S) int32: lowest-id downhill neighbor toward every
+        destination within ``layer`` (-1 where none — unreachable)."""
+        csr = self.csr
+        S = csr.n_switches
+        dist = self.layer_hops(layer)
+        m = self.layer_mask[layer]
+        NH = np.full((S, S), -1, dtype=np.int32)
+        for lolim in range(0, S, self.dst_chunk):
+            cols = np.arange(lolim, min(lolim + self.dst_chunk, S))
+            d = dist[:, cols]                                   # (S, C)
+            down = (m[:, None] & (d[csr.dst] == d[csr.src] - 1)
+                    & (d[csr.src] > 0))
+            e_idx, c_idx = np.nonzero(down)
+            tmp = np.full((S, cols.shape[0]), S, dtype=np.int64)
+            np.minimum.at(tmp, (csr.src[e_idx], c_idx), csr.dst[e_idx])
+            NH[:, cols] = np.where(tmp < S, tmp, -1).astype(np.int32)
+        return NH
+
+    def backup_next_hops(self) -> np.ndarray:
+        """(E, S) int32 MRC table: ``bnh[e, d]`` is the precomputed first
+        hop out of ``src[e]`` toward ``d`` in the layer protecting edge
+        ``e`` (which excludes ``e`` by construction), or -1 when that
+        layer cannot reach ``d`` from ``src[e]`` (the share stalls until
+        reconvergence).  Lazy; cached."""
+        if self._bnh is None:
+            t0 = time.perf_counter()
+            csr = self.csr
+            bnh = np.full((csr.n_edges, csr.n_switches), -1, dtype=np.int32)
+            for l in range(1, self.n_layers):
+                edges_l = np.flatnonzero(self.protect_layer == l)
+                if not edges_l.size:
+                    continue
+                NH = self._first_downhill_table(l)
+                bnh[edges_l] = NH[csr.src[edges_l]]
+            self._bnh = bnh
+            mx = get_metrics()
+            mx.inc("protection.backup_tables_built")
+            mx.observe("protection.backup_table_wall_s",
+                       time.perf_counter() - t0)
+        return self._bnh
+
+    def protection_coverage(self) -> float:
+        """Fraction of (edge, destination) cells with a usable backup
+        next-hop, excluding the trivial ``src[e] == d`` diagonal (1.0
+        when every protection layer stays connected)."""
+        bnh = self.backup_next_hops()
+        valid = (self.csr.src[:, None]
+                 != np.arange(self.csr.n_switches)[None, :])
+        return float((bnh >= 0)[valid].mean()) if bnh.size else 1.0
+
+    # ------------------------------------------------- degraded mapping ----
+
+    def _degraded_state(self, dg) -> "tuple[np.ndarray, np.ndarray, np.ndarray]":
+        """(surv_mult (E,), cap_deg (E,), alive_node (S,)) of a
+        :class:`~repro.sim.failures.DegradedGraph` in HEALTHY ids."""
+        csr = self.csr
+        nm = np.asarray(dg.node_map)
+        alive_node = nm >= 0
+        surv_mult = np.zeros(csr.n_edges)
+        adj = dg.graph.adj
+        for e in range(csr.n_edges):
+            u, v = int(csr.src[e]), int(csr.dst[e])
+            if alive_node[u] and alive_node[v]:
+                surv_mult[e] = adj[int(nm[u])].get(int(nm[v]), 0.0)
+        cap_deg = surv_mult * self.graph.link_gbps
+        return surv_mult, cap_deg, alive_node
+
+    # --------------------------------------------------- local reroute ----
+
+    def _pull(self, layer: int, dests: np.ndarray, inject: np.ndarray,
+              surv: np.ndarray, surv_mult: np.ndarray,
+              alive_node: np.ndarray, loads: np.ndarray):
+        """One level-ordered pull of ``inject`` (S, C) toward ``dests``
+        within ``layer``, splitting over *surviving* downhill edges.
+
+        Returns ``(delivered (C,), stalled_gbps, diversions)`` where
+        ``diversions`` maps protection-layer id -> (S, C) injections that
+        must continue there (shares whose downhill edges all failed).
+        Adds edge loads into ``loads`` in place.
+        """
+        csr = self.csr
+        S, C_all = inject.shape
+        # diverted re-injections touch few destinations: drop empty
+        # columns so protection-layer pulls only pay for live traffic
+        live = np.flatnonzero(inject.sum(axis=0) > 0)
+        if live.size < C_all:
+            if not live.size:
+                return np.zeros(C_all), 0.0, {}
+            d_live, st, divs = self._pull(layer, dests[live],
+                                          inject[:, live], surv,
+                                          surv_mult, alive_node, loads)
+            delivered = np.zeros(C_all)
+            delivered[live] = d_live
+            wide = {}
+            for l2, arr in divs.items():
+                full = np.zeros((S, C_all))
+                full[:, live] = arr
+                wide[l2] = full
+            return delivered, st, wide
+        C = C_all
+        dist = self.layer_hops(layer)[:, dests]                  # (S, C)
+        ok = ((dist >= 0) & alive_node[:, None]
+              & alive_node[dests][None, :])
+        stalled = float(inject[~ok].sum())
+        f = np.where(ok, inject, 0.0)
+        if f.sum() <= 0:
+            return np.zeros(C), stalled, {}
+        m = self.layer_mask[layer]
+        d_src = dist[csr.src]                                    # (E, C)
+        down = m[:, None] & (dist[csr.dst] == d_src - 1) & (d_src > 0)
+        alive_down = down & surv[:, None]
+        w = surv_mult[:, None] * alive_down
+        denom = np.zeros((S, C))
+        np.add.at(denom, csr.src, w)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            frac = np.where(alive_down, w / denom[csr.src], 0.0)
+        has_down = np.zeros((S, C), dtype=bool)
+        np.logical_or.at(has_down, csr.src, down)
+        stuck = has_down & (denom <= 0)       # every downhill edge failed
+        pls, pl_count = [], None
+        if stuck.any():
+            # diverted shares split evenly over the distinct protection
+            # layers of the failed downhill edges (spreads detour load)
+            failed_down = down & ~surv[:, None]
+            for l2 in range(1, self.n_layers):
+                sel_e = failed_down & (self.protect_layer == l2)[:, None]
+                has = np.zeros((S, C), dtype=bool)
+                el, cl = np.nonzero(sel_e)
+                has[csr.src[el], cl] = True
+                pls.append(has)
+            pl_count = np.maximum(
+                np.sum([h.astype(np.int64) for h in pls], axis=0), 1)
+        divs: dict = {}
+        # mass only moves downhill from where it was injected
+        top = int(dist[f > 0].max())
+        for level in range(top, 0, -1):
+            at = dist == level
+            if stuck.any():
+                dm = at & stuck & (f > 0)
+                if dm.any():
+                    for l2, has in zip(range(1, self.n_layers), pls):
+                        sel = dm & has
+                        if not sel.any():
+                            continue
+                        if l2 not in divs:
+                            divs[l2] = np.zeros((S, C))
+                        divs[l2] += np.where(sel, f / pl_count, 0.0)
+                    f = np.where(dm, 0.0, f)
+            fa = f * at
+            contrib = frac * fa[csr.src]                         # (E, C)
+            loads += contrib.sum(axis=1)
+            np.add.at(f, csr.dst, contrib)
+        delivered = f[dests, np.arange(C)].copy()
+        return delivered, stalled, divs
+
+    def local_reroute_loads(self, demands: DemandArrays, dg,
+                            max_redirects: "int | None" = None
+                            ) -> LocalRerouteResult:
+        """Reroute a HEALTHY demand matrix around the failures of ``dg``
+        using only precomputed state — the sub-ms local path.
+
+        No BFS and no graph rebuild happens here: every per-layer
+        distance table was computed at protection time, so the
+        failure-time work is renormalizing ECMP splits over surviving
+        edges and switching dead shares into their protection layers
+        (exactly what a switch does with an MRC/SRv6 backup-table hit).
+        """
+        csr = self.csr
+        validate = demands  # noqa: F841  (keep signature obvious)
+        surv_mult, cap_deg, alive_node = self._degraded_state(dg)
+        surv = surv_mult > 0
+        src = np.asarray(demands.src, dtype=np.int64)
+        dst = np.asarray(demands.dst, dtype=np.int64)
+        gbps = np.asarray(demands.gbps, dtype=np.float64)
+        keep = src != dst
+        src, dst, gbps = src[keep], dst[keep], gbps[keep]
+        if max_redirects is None:
+            max_redirects = self.n_layers
+        loads = np.zeros(csr.n_edges)
+        injected = float(gbps.sum())
+        delivered = stalled = diverted = 0.0
+        layer_gbps = np.zeros(self.n_layers)
+        n_pulls = 0
+        dests_u, inv = np.unique(dst, return_inverse=True)
+        S = csr.n_switches
+        chunk = self.dst_chunk
+        for lolim in range(0, dests_u.shape[0], chunk):
+            cols = np.arange(lolim, min(lolim + chunk, dests_u.shape[0]))
+            sel = (inv >= cols[0]) & (inv <= cols[-1])
+            inject = np.zeros((S, cols.shape[0]))
+            np.add.at(inject, (src[sel], inv[sel] - cols[0]), gbps[sel])
+            queue = {0: inject}
+            for depth in range(max_redirects + 1):
+                nxt: dict = {}
+                for layer, inj in sorted(queue.items()):
+                    tot = float(inj.sum())
+                    if tot <= 0:
+                        continue
+                    layer_gbps[layer] += tot
+                    if layer > 0:
+                        diverted += tot
+                    d, st, divs = self._pull(layer, dests_u[cols], inj,
+                                             surv, surv_mult, alive_node,
+                                             loads)
+                    n_pulls += 1
+                    delivered += float(d.sum())
+                    stalled += st
+                    for l2, arr in divs.items():
+                        if l2 < 0:
+                            stalled += float(arr.sum())
+                            continue
+                        if l2 in nxt:
+                            nxt[l2] += arr
+                        else:
+                            nxt[l2] = arr
+                queue = nxt
+                if not queue:
+                    break
+            for _, inj in queue.items():      # redirect budget exhausted
+                stalled += float(inj.sum())
+        mx = get_metrics()
+        mx.inc("protection.local_reroutes")
+        mx.inc("protection.pulls", n_pulls)
+        return LocalRerouteResult(loads, cap_deg, injected, delivered,
+                                  stalled, diverted, layer_gbps, n_pulls)
+
+    # ------------------------------------------------ layered multipath ----
+
+    def route_layered(self, demands: DemandArrays,
+                      flowlet_bytes: int = 1 << 17,
+                      msg_bytes: float = 1 << 22,
+                      seed: int = 0) -> GraphLinkLoads:
+        """FatPaths-style layered multipath on the healthy fabric: each
+        demand's rate is split across connected layers by hashing
+        flowlets (``msg_bytes`` worth per flow, ``flowlet_bytes`` each)
+        over the layer set — :func:`repro.sim.spray.flowlet_split` — and
+        each share routes minimally *within its layer*.  Returns healthy
+        loads on the full edge set (same :class:`GraphLinkLoads` API as
+        the plain engine)."""
+        from repro.sim.spray import flowlet_split
+        csr = self.csr
+        src = np.asarray(demands.src, dtype=np.int64)
+        dst = np.asarray(demands.dst, dtype=np.int64)
+        gbps = np.asarray(demands.gbps, dtype=np.float64)
+        keep = src != dst
+        src, dst, gbps = src[keep], dst[keep], gbps[keep]
+        loads = np.zeros(csr.n_edges)
+        if not src.size:
+            return GraphLinkLoads(csr, loads)
+        alive = np.array([self.layer_connected(l)
+                          for l in range(self.n_layers)])
+        sizes = np.full(src.shape[0], float(msg_bytes))
+        bts, _counts = flowlet_split(sizes, self.n_layers, flowlet_bytes,
+                                     seed=seed, alive=alive)
+        weights = bts / sizes[:, None]
+        surv = np.ones(csr.n_edges, dtype=bool)
+        alive_node = np.ones(csr.n_switches, dtype=bool)
+        dests_u, inv = np.unique(dst, return_inverse=True)
+        S = csr.n_switches
+        stalled = 0.0
+        for l in np.flatnonzero(alive):
+            wl = gbps * weights[:, l]
+            if not wl.sum():
+                continue
+            for lolim in range(0, dests_u.shape[0], self.dst_chunk):
+                cols = np.arange(lolim, min(lolim + self.dst_chunk,
+                                            dests_u.shape[0]))
+                sel = (inv >= cols[0]) & (inv <= cols[-1]) & (wl > 0)
+                inject = np.zeros((S, cols.shape[0]))
+                np.add.at(inject, (src[sel], inv[sel] - cols[0]), wl[sel])
+                _, st, divs = self._pull(int(l), dests_u[cols], inject,
+                                         surv, csr.mult, alive_node, loads)
+                stalled += st
+                assert not divs, "no diversions on a healthy fabric"
+        assert stalled == 0.0, "connected layers deliver everything"
+        get_metrics().inc("protection.layered_routes")
+        return GraphLinkLoads(csr, loads)

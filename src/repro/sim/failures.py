@@ -24,8 +24,15 @@ import numpy as np
 
 from repro.core.routing_graph import GraphRouter
 from repro.core.topology import SwitchGraph, Topology
+from repro.routing.protection import (ProtectedRouter, REROUTE_MODES,
+                                      validate_reroute_mode)
 from repro.telemetry import get_metrics, get_recorder
 from .fairshare import flow_incidence
+
+__all__ = ["FailureSpec", "parse_failure_spec", "DegradedGraph",
+           "degrade_graph", "degraded_router", "plane_capacity_factor",
+           "failure_throughput", "recovery_curve", "time_to_recover",
+           "REROUTE_MODES", "validate_reroute_mode"]
 
 
 @dataclass(frozen=True)
@@ -62,7 +69,13 @@ class FailureSpec:
 
 
 def parse_failure_spec(text: str) -> FailureSpec:
-    """Parse the CLI grammar ``link:0.01,switch:0.02,plane:1[,seed:3]``."""
+    """Parse the CLI grammar ``link:0.01,switch:0.02,plane:1[,seed:3]``.
+
+    Rejects (with a ``ValueError`` naming the offending part) duplicate
+    element kinds (``link:0.01,link:0.02`` would otherwise silently keep
+    the last), unknown keys, non-numeric values, and negative
+    fractions/counts — a mistyped spec must never half-run a suite.
+    """
     kw: dict = {}
     keys = {"link": "link_fraction", "switch": "switch_fraction",
             "plane": "planes_down", "seed": "seed"}
@@ -79,8 +92,22 @@ def parse_failure_spec(text: str) -> FailureSpec:
         if k not in keys:
             raise ValueError(f"unknown failure key {k!r} in {text!r}; "
                              f"known: {sorted(keys)}")
-        kw[keys[k]] = int(v) if keys[k] in ("planes_down", "seed") \
-            else float(v)
+        if keys[k] in kw:
+            raise ValueError(f"duplicate failure key {k!r} in {text!r}: "
+                             f"each element kind may appear once")
+        v = v.strip()
+        is_int = keys[k] in ("planes_down", "seed")
+        try:
+            val = int(v) if is_int else float(v)
+        except ValueError:
+            raise ValueError(
+                f"bad value {v!r} for failure key {k!r} in {text!r}: "
+                f"expected {'an integer' if is_int else 'a number'}"
+            ) from None
+        if val < 0:
+            raise ValueError(f"negative value {v!r} for failure key {k!r} "
+                             f"in {text!r}")
+        kw[keys[k]] = val
     return FailureSpec(**kw)
 
 
@@ -222,32 +249,60 @@ def recovery_curve(topo: Topology, demand_builder, spec: FailureSpec,
                    offered_per_nic_gbps: float, mode: str = "adaptive",
                    backend: str = "auto",
                    throughput_row: "dict | None" = None,
-                   reroute_wall_s: "float | None" = None) -> "list[dict]":
-    """Three-phase degraded-fabric curve for one traffic matrix.
+                   reroute_wall_s: "float | None" = None,
+                   reroute: str = "none",
+                   protection: "ProtectedRouter | None" = None,
+                   n_layers: int = 4) -> "list[dict]":
+    """Degraded-fabric recovery curve for one traffic matrix.
 
-    * ``healthy`` — routed throughput on the intact fabric;
-    * ``failed`` — failures hit, survivors have NOT re-routed: traffic
-      still follows healthy minimal paths, so the share of each flow's
-      ECMP spread crossing a fully-failed edge stalls (first-order
-      estimate from the incidence tensor);
-    * ``rerouted`` — survivors re-route on the degraded graph (graph
-      engine, ``mode``), planes re-spray.
+    The phase sequence depends on ``reroute`` (the three-way comparison
+    the resilience literature measures):
+
+    * ``"none"`` — today's global recompute: ``healthy`` / ``failed`` /
+      ``rerouted`` (survivors re-route on the degraded graph — a full
+      BFS + re-route, the reconvergence cost every flow pays);
+    * ``"local"`` — precomputed protection: ``healthy`` / ``failed`` /
+      ``local_reroute`` (stale distances + MRC backup layers, *no* BFS —
+      the phase wall is table lookups and load propagation only);
+    * ``"global"`` — the full story: ``healthy`` / ``failed`` /
+      ``local_reroute`` / ``reconverged`` (protection bridges the gap,
+      then global reconvergence restores optimal routing).
+
+    ``failed`` is the pre-reroute instant: traffic still follows healthy
+    minimal paths, so the ECMP share crossing a failed element stalls
+    (first-order estimate from the incidence tensor).
+
+    For ``"local"``/``"global"``, pass a prebuilt
+    :class:`~repro.routing.protection.ProtectedRouter` as ``protection``
+    to amortize provisioning across specs; otherwise one is built with
+    ``n_layers`` layers.  Protection state (per-layer BFS + backup
+    next-hop table) is forced *before* the failure instant — it is
+    provisioning-time work and never counts against a recovery wall.
 
     Pass a precomputed :func:`failure_throughput` record as
     ``throughput_row`` to reuse its degraded routing for the
-    ``rerouted`` phase instead of re-deriving it — and its measured wall
-    time as ``reroute_wall_s`` so the re-route phase still has a real
-    duration.
+    ``rerouted``/``reconverged`` phase instead of re-deriving it — and
+    its measured wall time as ``reroute_wall_s`` so the phase still has
+    a real duration.
 
-    Each row carries ``phase_wall_s`` (measured wall time of that phase's
-    computation: detect = failure sampling + loss estimate, re-route =
-    the degraded-routing recompute) and ``t_offset_s`` (cumulative start
+    Each row carries ``reroute``, ``phase_wall_s`` (measured wall time
+    of that phase's computation) and ``t_offset_s`` (cumulative start
     offset), so the recovery window is a measured span, not an inferred
-    one; an active flight recorder gets the same three spans on a
-    ``failures`` track.
+    one; an active flight recorder gets the same spans on a ``failures``
+    track.  Feed the rows to :func:`time_to_recover` for the
+    time-to-X%-throughput scalar.
     """
-    healthy_g = topo.build_graph()
-    healthy = GraphRouter(healthy_g, backend=backend)
+    validate_reroute_mode(reroute)
+    if reroute != "none":
+        if protection is None:
+            protection = ProtectedRouter(topo, n_layers=n_layers,
+                                         backend=backend)
+        protection.backup_next_hops()   # provisioning-time, pre-failure
+        healthy = protection.router
+        healthy_g = healthy.graph
+    else:
+        healthy_g = topo.build_graph()
+        healthy = GraphRouter(healthy_g, backend=backend)
     t0 = time.perf_counter()
     dem = demand_builder(topo, offered_per_nic_gbps, healthy_g)
     ll_h = healthy.route(dem, mode)
@@ -280,36 +335,82 @@ def recovery_curve(topo: Topology, demand_builder, spec: FailureSpec,
                      round(min(1.0, ll_h.saturation_throughput())
                            * stall_delivered * factor, 6),
                  "stalled_share": round(1 - stall_delivered, 6)})
-    # re-route window: the degraded-routing recompute
-    t0 = time.perf_counter()
-    try:
-        rr = throughput_row if throughput_row is not None else \
-            failure_throughput(topo, demand_builder, spec,
-                               offered_per_nic_gbps, mode, backend)
-        rows.append({"phase": "rerouted",
+    walls = [wall_h, wall_f]
+    mx = get_metrics()
+    if reroute != "none":
+        # local window: precomputed-backup reroute — table lookups +
+        # load propagation over stale distances, no BFS, no rebuild
+        t0 = time.perf_counter()
+        lr = protection.local_reroute_loads(dem, dg)
+        sat = lr.saturation_throughput()
+        rows.append({"phase": "local_reroute",
                      "delivered_fraction":
-                         round(min(1.0,
-                                   rr["degraded_throughput_fraction"]), 6),
-                     "max_util": rr["degraded_max_util"]})
-    except ValueError as e:           # disconnected survivors
-        rows.append({"phase": "rerouted", "disconnected": True,
-                     "reason": str(e)})
-    wall_r = time.perf_counter() - t0
-    if throughput_row is not None and reroute_wall_s is not None:
-        wall_r = reroute_wall_s           # the reused recompute's wall
+                         round(min(1.0, sat * lr.delivered_share)
+                               * factor, 6),
+                     "max_util": round(lr.max_utilization(), 6),
+                     "stalled_share": round(lr.stalled_share, 6),
+                     "diverted_gbps": round(lr.diverted_gbps, 6),
+                     "conservation_residual": lr.conservation_residual})
+        wall_l = time.perf_counter() - t0
+        walls.append(wall_l)
+        mx.observe("failures.local_reroute_wall_s", wall_l)
+    if reroute in ("none", "global"):
+        # re-route window: the global degraded-routing recompute
+        phase = "rerouted" if reroute == "none" else "reconverged"
+        t0 = time.perf_counter()
+        try:
+            rr = throughput_row if throughput_row is not None else \
+                failure_throughput(topo, demand_builder, spec,
+                                   offered_per_nic_gbps, mode, backend)
+            rows.append({"phase": phase,
+                         "delivered_fraction":
+                             round(min(1.0,
+                                       rr["degraded_throughput_fraction"]),
+                                   6),
+                         "max_util": rr["degraded_max_util"]})
+        except ValueError as e:           # disconnected survivors
+            rows.append({"phase": phase, "disconnected": True,
+                         "reason": str(e)})
+        wall_r = time.perf_counter() - t0
+        if throughput_row is not None and reroute_wall_s is not None:
+            wall_r = reroute_wall_s           # the reused recompute's wall
+        walls.append(wall_r)
+        mx.observe("failures.reroute_wall_s", wall_r)
     offset = 0.0
     rec = get_recorder()
-    for row, wall in zip(rows, (wall_h, wall_f, wall_r)):
+    for row, wall in zip(rows, walls):
+        row["reroute"] = reroute
         row["phase_wall_s"] = round(wall, 6)
         row["t_offset_s"] = round(offset, 6)
         if rec is not None:
             rec.span(f"{spec.label()}:{row['phase']}", offset, wall,
-                     process="failures", thread=topo.name,
+                     process="failures", thread=f"{topo.name}:{reroute}",
                      cat="recovery",
                      args={k: v for k, v in row.items()
                            if k not in ("phase_wall_s", "t_offset_s")})
         offset += wall
-    mx = get_metrics()
     mx.observe("failures.detect_wall_s", wall_f)
-    mx.observe("failures.reroute_wall_s", wall_r)
     return rows
+
+
+def time_to_recover(rows: "list[dict]", target: float = 0.9
+                    ) -> "float | None":
+    """Seconds from the failure instant (start of the detect window)
+    until delivered throughput first returns to ``target`` × the healthy
+    level, measured at the end of the phase that gets there.
+
+    ``None`` when no phase recovers (e.g. disconnected survivors) — the
+    fabric never comes back without repair.
+    """
+    if not rows or rows[0].get("phase") != "healthy":
+        raise ValueError("rows must start with the healthy phase")
+    if len(rows) < 2:               # nothing ever failed
+        return None
+    healthy = rows[0].get("delivered_fraction", 0.0)
+    fail_t = rows[1]["t_offset_s"]
+    for row in rows[1:]:
+        df = row.get("delivered_fraction")
+        if df is not None and df >= target * healthy - 1e-12:
+            return round(row["t_offset_s"] + row["phase_wall_s"] - fail_t,
+                         6)
+    return None

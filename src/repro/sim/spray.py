@@ -47,6 +47,77 @@ class SprayedSimResult:
         return float(ok.max()) if ok.size else 0.0
 
 
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer, vectorized over uint64 (wraparound is the
+    point — numpy unsigned arithmetic is modular)."""
+    x = x.astype(np.uint64, copy=True)
+    x += np.uint64(0x9E3779B97F4A7C15)
+    x ^= x >> np.uint64(30)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(27)
+    x *= np.uint64(0x94D049BB133111EB)
+    x ^= x >> np.uint64(31)
+    return x
+
+
+def flowlet_split(sizes: np.ndarray, n_buckets: int, flowlet_bytes: float,
+                  seed: int = 0, alive: "np.ndarray | None" = None
+                  ) -> "tuple[np.ndarray, np.ndarray]":
+    """Hash each flow's flowlets over ``n_buckets`` planes/layers.
+
+    FatPaths-style flowlet switching: flow ``i`` is cut into
+    ``ceil(sizes[i] / flowlet_bytes)`` flowlets (the last one partial)
+    and flowlet ``j`` lands on bucket ``mix64(flow, j, seed) %
+    n_buckets``.  When ``alive`` marks dead buckets, only the flowlets
+    that hashed onto a dead bucket re-hash (salted) over the alive set —
+    every alive-bucket assignment is *identical* to the healthy split,
+    which is the stability property that makes flowlet reroute local
+    (pinned by ``tests/test_sim.py``).
+
+    Returns ``(bytes (F, n_buckets), counts (F, n_buckets))``.
+    """
+    sizes = np.asarray(sizes, dtype=np.float64)
+    if flowlet_bytes <= 0:
+        raise ValueError("flowlet_bytes must be positive")
+    if n_buckets < 1:
+        raise ValueError("n_buckets must be >= 1")
+    if alive is None:
+        alive = np.ones(n_buckets, dtype=bool)
+    alive = np.asarray(alive, dtype=bool)
+    if alive.shape != (n_buckets,):
+        raise ValueError("alive mask length mismatch")
+    if not alive.any():
+        raise RuntimeError("all buckets down")
+    F = sizes.shape[0]
+    n_fl = np.ceil(sizes / flowlet_bytes).astype(np.int64)
+    tot = int(n_fl.sum())
+    bytes_out = np.zeros((F, n_buckets))
+    counts = np.zeros((F, n_buckets), dtype=np.int64)
+    if tot == 0:
+        return bytes_out, counts
+    flow_of = np.repeat(np.arange(F, dtype=np.uint64), n_fl)
+    offsets = np.concatenate([[0], np.cumsum(n_fl)[:-1]])
+    idx = (np.arange(tot, dtype=np.uint64)
+           - np.repeat(offsets, n_fl).astype(np.uint64))
+    h = _mix64(_mix64(flow_of ^ (np.uint64(seed) * np.uint64(0x9E3779B1)))
+               ^ idx)
+    b = (h % np.uint64(n_buckets)).astype(np.int64)
+    dead_sel = ~alive[b]
+    if dead_sel.any():
+        alive_ids = np.flatnonzero(alive)
+        h2 = _mix64(h[dead_sel] ^ np.uint64(0xD6E8FEB86659FD93))
+        b[dead_sel] = alive_ids[(h2 % np.uint64(alive_ids.shape[0]))
+                                .astype(np.int64)]
+        get_metrics().inc("spray.flowlet_rehashes", int(dead_sel.sum()))
+    sizes_fl = np.full(tot, float(flowlet_bytes))
+    has = n_fl > 0
+    last_pos = (np.cumsum(n_fl) - 1)[has]
+    sizes_fl[last_pos] = sizes[has] - (n_fl[has] - 1) * flowlet_bytes
+    np.add.at(bytes_out, (flow_of.astype(np.int64), b), sizes_fl)
+    np.add.at(counts, (flow_of.astype(np.int64), b), 1)
+    return bytes_out, counts
+
+
 def _per_plane_bytes(sizes: np.ndarray, cfg: SprayConfig) -> np.ndarray:
     """(F, n) whole-chunk round-robin split of each flow (vectorized
     :func:`repro.core.planes.split_chunks`)."""
@@ -74,7 +145,9 @@ def simulate_sprayed(topo, flows: "list[FlowSpec]",
                      rate_cap_gbps: "float | None" = None,
                      net: NetParams = DEFAULT_NET,
                      engine: str = "auto", backend: str = "numpy",
-                     router=None) -> SprayedSimResult:
+                     router=None, granularity: str = "chunk",
+                     flowlet_bytes: "float | None" = None,
+                     flowlet_seed: int = 0) -> SprayedSimResult:
     """Simulate sprayed flows across all ``topo.n_planes`` planes.
 
     ``plane_skew[k] >= 1`` multiplies plane ``k``'s transfer time
@@ -82,28 +155,49 @@ def simulate_sprayed(topo, flows: "list[FlowSpec]",
     re-sprayed evenly over the survivors before simulation.  All planes
     share one incidence tensor (identical fabric copies), so the cost is
     ``n_alive`` event-loop runs over the same routes.
+
+    ``granularity`` selects the plane split: ``"chunk"`` (default) is the
+    NIC's deterministic whole-chunk round-robin; ``"flowlet"`` hashes
+    ``flowlet_bytes``-sized flowlets over the planes
+    (:func:`flowlet_split`), and dead planes only re-hash the flowlets
+    that landed on them — surviving assignments are stable, so a plane
+    death perturbs exactly the traffic that was on the dead plane.
     """
     cfg = cfg or SprayConfig(n_planes=topo.n_planes)
     skew = list(plane_skew or [1.0] * cfg.n_planes)
     if len(skew) != cfg.n_planes:
         raise ValueError("plane_skew length mismatch")
+    if granularity not in ("chunk", "flowlet"):
+        raise ValueError(f"unknown spray granularity {granularity!r}")
     if router is None:
         router = make_router(topo, backend="auto", engine=engine)
     sizes = np.array([f.size_bytes for f in flows], dtype=np.float64)
     starts = np.array([f.start_s for f in flows])
-    per_plane = _per_plane_bytes(sizes, cfg)
     alive = [k for k, s in enumerate(skew) if not math.isinf(s)]
     if not alive:
         raise RuntimeError("all planes down")
     dead = [k for k in range(cfg.n_planes) if k not in alive]
     mx = get_metrics()
     mx.inc("spray.plane_sims", len(alive))
-    if dead:
-        mx.inc("spray.respray_events", len(dead))
-        extra = per_plane[:, dead].sum(axis=1) / len(alive)
-        per_plane[:, dead] = 0.0
-        for k in alive:
-            per_plane[:, k] += extra
+    if granularity == "flowlet":
+        alive_mask = np.zeros(cfg.n_planes, dtype=bool)
+        alive_mask[alive] = True
+        fl_bytes = flowlet_bytes if flowlet_bytes is not None \
+            else cfg.chunk_bytes
+        per_plane, fl_counts = flowlet_split(sizes, cfg.n_planes, fl_bytes,
+                                             seed=flowlet_seed,
+                                             alive=alive_mask)
+        mx.inc("spray.flowlets", int(fl_counts.sum()))
+        if dead:
+            mx.inc("spray.respray_events", len(dead))
+    else:
+        per_plane = _per_plane_bytes(sizes, cfg)
+        if dead:
+            mx.inc("spray.respray_events", len(dead))
+            extra = per_plane[:, dead].sum(axis=1) / len(alive)
+            per_plane[:, dead] = 0.0
+            for k in alive:
+                per_plane[:, k] += extra
     inc = flow_incidence(router, flows_to_demands(flows), mode)
     cap = rate_cap_gbps if rate_cap_gbps is not None else topo.port_gbps
     F = sizes.shape[0]
@@ -112,7 +206,10 @@ def simulate_sprayed(topo, flows: "list[FlowSpec]",
     for k in alive:
         res = simulate_incidence(inc, per_plane[:, k], cap,
                                  start_s=starts, net=net, backend=backend)
-        n_chunks = np.ceil(per_plane[:, k] / cfg.chunk_bytes)
+        if granularity == "flowlet":
+            n_chunks = fl_counts[:, k].astype(np.float64)
+        else:
+            n_chunks = np.ceil(per_plane[:, k] / cfg.chunk_bytes)
         transfer = res.transfer_s() + n_chunks * cfg.per_chunk_overhead_s
         plane_t[:, k] = transfer * skew[k]
         stalled |= res.stalled

@@ -15,6 +15,7 @@ import math
 import numpy as np
 import pytest
 
+from repro.experiments.artifacts import SCHEMA_VERSION
 from repro.core.hyperx import MPHX
 from repro.core.netsim import (DEFAULT_NET, NetParams, _alpha,
                                allgather_time, make_router,
@@ -362,7 +363,7 @@ def test_cosim_suite_writes_v4_artifacts(tmp_path):
                               config_names=["mixtral_8x22b"],
                               topo_names=["mphx-2p-8x8"], n_ranks=16)
     disk = json.load(open(tmp_path / "cosim.json"))
-    assert disk["schema_version"] == 6
+    assert disk["schema_version"] == SCHEMA_VERSION
     assert disk["suite"] == "cosim"
     rows = [r for r in disk["rows"] if not r.get("skipped")]
     # MPHX runs both engines plus the mapped placement

@@ -13,6 +13,7 @@ import os
 import numpy as np
 import pytest
 
+from repro.experiments.artifacts import SCHEMA_VERSION
 from repro.core import MPHX
 from repro.core.routing import (HyperXRouter, bit_complement_traffic,
                                 neighbor_shift_traffic, route_demands,
@@ -243,7 +244,7 @@ def test_table2_suite_artifact(tmp_path):
     assert (tmp_path / "table2.json").exists()
     assert (tmp_path / "table2.md").exists()
     disk = json.loads((tmp_path / "table2.json").read_text())
-    assert disk["schema_version"] == 6
+    assert disk["schema_version"] == SCHEMA_VERSION
     assert disk["suite"] == "table2"
     assert len(disk["rows"]) == 8
     by_name = {r["topology"]: r for r in disk["rows"]}
@@ -261,7 +262,7 @@ def test_sweep_suite_artifact(tmp_path):
         modes=["minimal"], load_fractions=(0.5, 1.0))
     disk = json.loads((tmp_path / "sweep.json").read_text())
     assert disk["suite"] == "sweep"
-    assert disk["schema_version"] == 6
+    assert disk["schema_version"] == SCHEMA_VERSION
     assert len(disk["rows"]) == 2 * 2  # 2 scenarios x 2 load levels
     for r in disk["rows"]:
         assert {"topology", "scenario", "mode", "engine", "offered_fraction",

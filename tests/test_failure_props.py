@@ -1,0 +1,150 @@
+"""Property-based tests for failure injection (repro.sim.failures).
+
+Invariants of ``degrade_graph`` under random failure specs: survivors
+never include a failed element, the node compaction is a bijection onto
+0..S'-1, capacity only ever shrinks, the ``info()`` ledger reconciles
+with the surviving adjacency, and ``parse_failure_spec`` rejects every
+malformed spec with a ``ValueError`` that names the offending part.
+"""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.dragonfly import Dragonfly
+from repro.core.hyperx import MPHX
+from repro.sim.failures import (FailureSpec, degrade_graph,
+                                parse_failure_spec)
+
+MPHX_SMALL = MPHX(n=2, p=8, dims=(8, 8))
+DF_SMALL = Dragonfly(p=2, a=4, h=2, groups=9, name="Dragonfly (small)")
+GRAPHS = {"mphx": MPHX_SMALL.build_graph(), "df": DF_SMALL.build_graph()}
+
+# encode (link, switch, seed) in one integer so the shim (no st.builds)
+# still enumerates the full cross product, boundaries first
+spec_st = st.integers(0, 159).map(lambda i: FailureSpec(
+    link_fraction=[0.0, 0.01, 0.05, 0.2, 0.5][i % 5],
+    switch_fraction=[0.0, 0.02, 0.1, 0.3][(i // 5) % 4],
+    seed=i // 20))
+graph_st = st.sampled_from(sorted(GRAPHS))
+
+
+def _undirected_links(g) -> float:
+    return sum(m for u in range(g.n_switches)
+               for v, m in g.adj[u].items() if v > u)
+
+
+@given(name=graph_st, spec=spec_st)
+@settings(max_examples=40, deadline=None)
+def test_degrade_survivors_exclude_failed_elements(name, spec):
+    g = GRAPHS[name]
+    dg = degrade_graph(g, spec)
+    # every failed switch maps to -1; every survivor to a unique new id
+    for u in dg.failed_switches:
+        assert dg.node_map[u] == -1
+    alive = dg.node_map[dg.node_map >= 0]
+    assert len(set(alive.tolist())) == dg.graph.n_switches
+    assert sorted(alive.tolist()) == list(range(dg.graph.n_switches))
+    # fully-failed edges are gone from the surviving adjacency
+    for u, v in dg.fully_failed_edges:
+        nu, nv = int(dg.node_map[u]), int(dg.node_map[v])
+        assert nu >= 0 and nv >= 0          # else it'd be a switch kill
+        assert nv not in dg.graph.adj[nu]
+
+
+@given(name=graph_st, spec=spec_st)
+@settings(max_examples=40, deadline=None)
+def test_degrade_capacity_only_shrinks(name, spec):
+    g = GRAPHS[name]
+    dg = degrade_graph(g, spec)
+    # per surviving edge: multiplicity never grows
+    for u in range(g.n_switches):
+        nu = int(dg.node_map[u])
+        if nu < 0:
+            continue
+        for v, m in g.adj[u].items():
+            nv = int(dg.node_map[v])
+            if nv < 0:
+                continue
+            assert dg.graph.adj[nu].get(nv, 0.0) <= m + 1e-12
+
+
+@given(name=graph_st, spec=spec_st)
+@settings(max_examples=40, deadline=None)
+def test_degrade_info_ledger_reconciles(name, spec):
+    g = GRAPHS[name]
+    dg = degrade_graph(g, spec)
+    info = dg.info()
+    total = _undirected_links(g)
+    assert dg.total_links == pytest.approx(total)
+    surviving = _undirected_links(dg.graph)
+    # removed + surviving == healthy total (the byte ledger of links)
+    assert dg.failed_links + surviving == pytest.approx(total)
+    assert 0.0 <= info["failed_link_fraction"] <= 1.0
+    assert info["failed_switches"] == len(dg.failed_switches)
+    assert info["fully_failed_edges"] == len(dg.fully_failed_edges)
+    if spec.is_noop:
+        assert dg.failed_links == 0.0
+        assert not dg.fully_failed_edges
+        assert surviving == pytest.approx(total)
+
+
+@given(name=graph_st, spec=spec_st)
+@settings(max_examples=25, deadline=None)
+def test_degrade_nics_follow_surviving_switches(name, spec):
+    g = GRAPHS[name]
+    dg = degrade_graph(g, spec)
+    expect = [int(dg.node_map[u]) for u in g.nic_nodes
+              if dg.node_map[u] >= 0]
+    assert dg.graph.nic_nodes == expect
+
+
+@given(seed=st.integers(0, 31))
+@settings(max_examples=32, deadline=None)
+def test_degrade_deterministic_in_seed(seed):
+    spec = FailureSpec(link_fraction=0.1, switch_fraction=0.05, seed=seed)
+    a = degrade_graph(GRAPHS["mphx"], spec)
+    b = degrade_graph(GRAPHS["mphx"], spec)
+    assert a.failed_switches == b.failed_switches
+    assert a.fully_failed_edges == b.fully_failed_edges
+    assert a.failed_links == b.failed_links
+
+
+# ----------------------------------------------- spec parsing rejection ----
+
+
+def test_parse_failure_spec_roundtrip():
+    spec = parse_failure_spec("link:0.05,plane:1,seed:3")
+    assert spec == FailureSpec(link_fraction=0.05, planes_down=1, seed=3)
+    assert parse_failure_spec(spec.label()).link_fraction == 0.05
+    assert parse_failure_spec("") == FailureSpec()
+    assert parse_failure_spec(" link:0.1 , switch:0.2 ") \
+        == FailureSpec(link_fraction=0.1, switch_fraction=0.2)
+
+
+@pytest.mark.parametrize("bad,needle", [
+    ("link:0.01,link:0.02", "duplicate"),
+    ("bogus:1", "unknown"),
+    ("link:-0.1", "negative"),
+    ("plane:-1", "negative"),
+    ("seed:-2", "negative"),
+    ("link:abc", "expected a number"),
+    ("plane:1.5", "expected an integer"),
+    ("link0.01", "expected key:value"),
+    ("link:0.01,,switch:x", "expected a number"),
+])
+def test_parse_failure_spec_rejects(bad, needle):
+    with pytest.raises(ValueError, match=needle):
+        parse_failure_spec(bad)
+
+
+def test_failure_spec_bounds():
+    with pytest.raises(ValueError):
+        FailureSpec(link_fraction=1.0)
+    with pytest.raises(ValueError):
+        FailureSpec(switch_fraction=-0.1)
+    with pytest.raises(ValueError):
+        FailureSpec(planes_down=-1)

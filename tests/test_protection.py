@@ -1,0 +1,291 @@
+"""Fast-reroute protection state (repro.routing.protection).
+
+The acceptance contract of the resilience PR:
+
+* every undirected edge is excluded from exactly one protection layer
+  (MRC round-robin coverage) and layer 0 is the full graph;
+* the precomputed backup next-hop table only ever points at a neighbor
+  reachable *without* the protected edge, strictly downhill in that
+  edge's protection layer;
+* ``local_reroute_loads`` conserves bytes (injected == delivered +
+  stalled to 1e-9), never places load on a failed element, and is a
+  no-op on the healthy fabric;
+* FatPaths-style ``route_layered`` flowlet spraying conserves demand on
+  the healthy fabric and is deterministic in the seed;
+* ``recovery_curve`` produces the documented phase sequence per reroute
+  mode and ``time_to_recover`` measures the first recovering phase.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dragonfly import Dragonfly
+from repro.core.hyperx import MPHX
+from repro.core.routing_graph import GraphRouter, graph_uniform_demands
+from repro.routing.protection import (REROUTE_MODES, ProtectedRouter,
+                                      validate_reroute_mode)
+from repro.sim.failures import (FailureSpec, degrade_graph,
+                                parse_failure_spec, recovery_curve,
+                                time_to_recover)
+
+MPHX_SMALL = MPHX(n=2, p=8, dims=(8, 8))
+DF_SMALL = Dragonfly(p=2, a=4, h=2, groups=9, name="Dragonfly (small)")
+
+
+@pytest.fixture(scope="module")
+def prot():
+    return ProtectedRouter(MPHX_SMALL, n_layers=4)
+
+
+# ------------------------------------------------------------ validation ----
+
+
+def test_reroute_mode_validation():
+    assert REROUTE_MODES == ("none", "local", "global")
+    for m in REROUTE_MODES:
+        assert validate_reroute_mode(m) == m
+    with pytest.raises(ValueError):
+        validate_reroute_mode("bogus")
+
+
+def test_constructor_rejects_bad_params():
+    with pytest.raises(ValueError):
+        ProtectedRouter(MPHX_SMALL, n_layers=1)
+    with pytest.raises(ValueError):
+        ProtectedRouter(MPHX_SMALL, rho=0.0)
+    with pytest.raises(ValueError):
+        ProtectedRouter(MPHX_SMALL, rho=1.5)
+
+
+def test_accepts_topology_graph_and_router():
+    g = MPHX_SMALL.build_graph()
+    for src in (MPHX_SMALL, g, GraphRouter(g, backend="numpy")):
+        p = ProtectedRouter(src, n_layers=3)
+        assert p.csr.n_edges == p.layer_mask.shape[1]
+
+
+# ----------------------------------------------------------- layer masks ----
+
+
+def test_layer_zero_is_full_graph(prot):
+    assert prot.layer_mask[0].all()
+
+
+def test_every_edge_protected_exactly_once(prot):
+    """Round-robin layer assignment: each directed edge is excluded from
+    its protect layer and present everywhere else (rho=1)."""
+    L, E = prot.layer_mask.shape
+    excluded = (~prot.layer_mask[1:]).sum(axis=0)       # per-edge count
+    assert (excluded == 1).all()
+    for e in range(0, E, max(1, E // 64)):              # sampled check
+        pl = int(prot.protect_layer[e])
+        assert 1 <= pl < L
+        assert not prot.layer_mask[pl, e]
+
+
+def test_both_directions_share_protect_layer(prot):
+    """An undirected failure kills both directed edges — they must map
+    to the same protection layer or one direction would be unprotected."""
+    csr = prot.csr
+    key = {}
+    for e in range(csr.n_edges):
+        u, v = int(csr.src[e]), int(csr.dst[e])
+        k = (min(u, v), max(u, v))
+        pl = int(prot.protect_layer[e])
+        assert key.setdefault(k, pl) == pl
+
+
+def test_layers_connected_on_mphx(prot):
+    assert prot.connected_layers() == list(range(prot.n_layers))
+    counts = prot.layer_edge_counts()
+    assert counts[0] == prot.csr.n_edges
+    assert (counts[1:] < counts[0]).all()
+
+
+def test_rho_subsampling_thins_layers():
+    full = ProtectedRouter(MPHX_SMALL, n_layers=4, rho=1.0)
+    thin = ProtectedRouter(MPHX_SMALL, n_layers=4, rho=0.5, seed=3)
+    assert thin.layer_edge_counts()[1:].sum() \
+        < full.layer_edge_counts()[1:].sum()
+
+
+# ------------------------------------------------------ backup next-hops ----
+
+
+def test_backup_table_shape_and_coverage(prot):
+    bnh = prot.backup_next_hops()
+    assert bnh.shape == (prot.csr.n_edges, prot.csr.n_switches)
+    assert prot.protection_coverage() == pytest.approx(1.0)
+
+
+def test_backup_hop_is_downhill_and_avoids_protected_edge(prot):
+    """bnh[e, d] must be a layer-adjacent neighbor of src[e], strictly
+    closer to d in e's protection layer, and never dst[e] itself (every
+    parallel (src,dst) edge shares the protection layer exclusion)."""
+    csr = prot.csr
+    bnh = prot.backup_next_hops()
+    rng = np.random.default_rng(0)
+    for e in rng.choice(csr.n_edges, size=32, replace=False):
+        pl = int(prot.protect_layer[e])
+        dist = prot.layer_hops(pl)
+        s = int(csr.src[e])
+        neigh = set(csr.dst[np.flatnonzero(
+            (csr.src == s) & prot.layer_mask[pl])].tolist())
+        for d in rng.choice(csr.n_switches, size=8, replace=False):
+            h = int(bnh[e, d])
+            if s == int(d):
+                assert h == -1
+                continue
+            assert h >= 0
+            assert h != int(csr.dst[e])
+            assert h in neigh
+            assert dist[h, d] == dist[s, d] - 1
+
+
+# ------------------------------------------------------- local reroute ----
+
+
+def _demands(topo, dg=None):
+    return graph_uniform_demands(topo, 400.0,
+                                 graph=None if dg is None else dg.graph)
+
+
+@pytest.mark.parametrize("spec_text", ["link:0.05", "link:0.1,seed:2",
+                                       "switch:0.03,seed:1"])
+def test_local_reroute_conserves_and_avoids_dead(spec_text):
+    prot = ProtectedRouter(MPHX_SMALL, n_layers=8)
+    dg = degrade_graph(prot.graph, parse_failure_spec(spec_text))
+    lr = prot.local_reroute_loads(_demands(MPHX_SMALL), dg)
+    assert lr.conservation_residual < 1e-9
+    assert lr.delivered_share + lr.stalled_share == pytest.approx(1.0)
+    surv_mult, _, _ = prot._degraded_state(dg)
+    assert float(np.abs(lr.loads[surv_mult <= 0]).max(initial=0.0)) == 0.0
+    assert np.isfinite(lr.max_utilization())
+    info = lr.info()
+    assert info["conservation_residual"] < 1e-9
+
+
+def test_local_reroute_noop_on_healthy_fabric():
+    prot = ProtectedRouter(DF_SMALL, n_layers=4)
+    dg = degrade_graph(prot.graph, FailureSpec())
+    lr = prot.local_reroute_loads(_demands(DF_SMALL), dg)
+    assert lr.stalled_gbps == 0.0
+    assert lr.diverted_gbps == 0.0
+    assert lr.delivered_share == pytest.approx(1.0)
+    # healthy reroute == the plain minimal route, load for load
+    ll = prot.router.route(_demands(DF_SMALL), "minimal")
+    assert np.abs(lr.loads - ll.loads).max() < 1e-6
+
+
+def test_local_reroute_diverts_on_full_edge_failure():
+    """Killing whole undirected edges forces shares onto protection
+    layers: diverted > 0 and the per-layer byte ledger reconciles."""
+    prot = ProtectedRouter(MPHX_SMALL, n_layers=8)
+    dg = degrade_graph(prot.graph,
+                       FailureSpec(link_fraction=0.15, seed=4))
+    assert dg.fully_failed_edges, "spec must fully fail some edges"
+    lr = prot.local_reroute_loads(_demands(MPHX_SMALL), dg)
+    assert lr.diverted_gbps > 0
+    assert lr.layer_gbps[1:].sum() == pytest.approx(lr.diverted_gbps)
+    assert lr.conservation_residual < 1e-9
+
+
+# ---------------------------------------------------- layered multipath ----
+
+
+def test_route_layered_healthy_conservation(prot):
+    dem = _demands(MPHX_SMALL)
+    ll = prot.route_layered(dem, seed=1)
+    assert (ll.loads >= 0).all()
+    # layered totals == minimal totals is NOT required (longer detours
+    # add hop-bytes) but delivery is asserted inside route_layered; the
+    # external pin: utilization finite and within a detour factor.
+    base = prot.router.route(dem, "minimal")
+    assert np.isfinite(ll.max_utilization())
+    assert ll.loads.sum() >= base.loads.sum() - 1e-6
+
+
+def test_route_layered_deterministic_in_seed(prot):
+    dem = _demands(MPHX_SMALL)
+    a = prot.route_layered(dem, seed=7).loads
+    b = prot.route_layered(dem, seed=7).loads
+    c = prot.route_layered(dem, seed=8).loads
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+# ------------------------------------------------- recovery-curve modes ----
+
+
+def _curve(reroute, **kw):
+    build = lambda t, o, g: graph_uniform_demands(t, o, graph=g)
+    spec = parse_failure_spec("link:0.05,seed:1")
+    return recovery_curve(MPHX_SMALL, build, spec, 400.0, mode="minimal",
+                          reroute=reroute, **kw)
+
+
+def test_recovery_curve_phase_names_per_mode():
+    assert [r["phase"] for r in _curve("none")] \
+        == ["healthy", "failed", "rerouted"]
+    assert [r["phase"] for r in _curve("local")] \
+        == ["healthy", "failed", "local_reroute"]
+    assert [r["phase"] for r in _curve("global")] \
+        == ["healthy", "failed", "local_reroute", "reconverged"]
+
+
+def test_recovery_curve_rows_tagged_and_measured():
+    prot = ProtectedRouter(MPHX_SMALL, n_layers=8)
+    rows = _curve("global", protection=prot)
+    assert all(r["reroute"] == "global" for r in rows)
+    assert all(r["phase_wall_s"] >= 0 for r in rows)
+    lr = rows[2]
+    assert lr["phase"] == "local_reroute"
+    assert lr["conservation_residual"] < 1e-9
+    assert lr["delivered_fraction"] >= rows[1]["delivered_fraction"] - 1e-9
+
+
+def test_recovery_curve_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        _curve("fastest")
+
+
+def test_time_to_recover_semantics():
+    rows = [
+        {"phase": "healthy", "delivered_fraction": 1.0,
+         "t_offset_s": 0.0, "phase_wall_s": 0.01},
+        {"phase": "failed", "delivered_fraction": 0.6,
+         "t_offset_s": 0.2, "phase_wall_s": 0.05},
+        {"phase": "local_reroute", "delivered_fraction": 0.95,
+         "t_offset_s": 0.25, "phase_wall_s": 0.04},
+    ]
+    # failure at t=0.2; recovery lands at 0.25 + 0.04 = 0.29
+    assert time_to_recover(rows) == pytest.approx(0.09)
+    rows[2]["delivered_fraction"] = 0.85       # never re-crosses 90%
+    assert time_to_recover(rows) is None
+    assert time_to_recover(rows, target=0.8) == pytest.approx(0.09)
+    assert time_to_recover(rows[:1]) is None   # no failed phase
+
+
+# -------------------------------------------------------- suite wiring ----
+
+
+def test_failures_suite_recovery_summary(tmp_path):
+    from repro.experiments.simsuite import run_failures_suite
+
+    payload = run_failures_suite(outdir=str(tmp_path),
+                                 topo_names=["mphx-2p-8x8"],
+                                 scenario_names=["uniform"],
+                                 failure_specs=["link:0.05"],
+                                 mode="minimal",
+                                 reroute_modes=["none", "local"],
+                                 protection_layers=8)
+    assert payload["params"]["reroute_modes"] == ["none", "local"]
+    assert payload["params"]["protection_layers"] == 8
+    summaries = [r for r in payload["rows"]
+                 if r.get("kind") == "recovery_summary"]
+    assert {r["reroute"] for r in summaries} == {"none", "local"}
+    local = next(r for r in summaries if r["reroute"] == "local")
+    assert local["protection_coverage"] == pytest.approx(1.0)
+    assert local["protection_layers"] == 8
+    recs = [r for r in payload["rows"] if r.get("kind") == "recovery"]
+    assert {r["reroute"] for r in recs} == {"none", "local"}

@@ -18,6 +18,7 @@ import json
 import numpy as np
 import pytest
 
+from repro.experiments.artifacts import SCHEMA_VERSION
 from repro.core import MPHX
 from repro.core.dragonfly import Dragonfly, DragonflyPlus
 from repro.core.fattree import MultiPlaneFatTree, ThreeTierFatTree
@@ -290,7 +291,7 @@ def test_sweep_schema_v2_roundtrip_and_skips(tmp_path, capsys):
         modes=["minimal"], load_fractions=(0.5, 1.0))
     disk = json.loads((tmp_path / "sweep.json").read_text())
     assert disk == payload
-    assert disk["schema_version"] == 6
+    assert disk["schema_version"] == SCHEMA_VERSION
     assert disk["params"]["n_routed_rows"] == 2
     assert disk["params"]["n_skipped"] == 1
     routed = [r for r in disk["rows"] if not r.get("skipped")]

@@ -17,6 +17,7 @@ import math
 import numpy as np
 import pytest
 
+from repro.experiments.artifacts import SCHEMA_VERSION
 from repro.core.dragonfly import Dragonfly
 from repro.core.fattree import ThreeTierFatTree
 from repro.core.hyperx import MPHX
@@ -431,7 +432,7 @@ def test_sim_suite_artifact(tmp_path):
                             load_fractions=(0.5,))
     disk = json.loads((tmp_path / "sim.json").read_text())
     assert disk == payload
-    assert disk["schema_version"] == 6
+    assert disk["schema_version"] == SCHEMA_VERSION
     assert disk["suite"] == "sim"
     assert disk["params"]["all_steady_checks_agree_1e-6"] is True
     kinds = {r.get("kind") for r in disk["rows"]}
@@ -449,7 +450,7 @@ def test_failures_suite_artifact_and_cli(tmp_path):
                "--failures", "link:0.1", "--failure-mode", "minimal"])
     assert rc == 0
     disk = json.loads((tmp_path / "failures.json").read_text())
-    assert disk["schema_version"] == 6
+    assert disk["schema_version"] == SCHEMA_VERSION
     assert disk["suite"] == "failures"
     assert disk["params"]["failure_specs"] == ["link:0.1"]
     kinds = [r.get("kind") for r in disk["rows"]]

@@ -113,3 +113,76 @@ def test_dead_plane_never_beats_healthy_fabric(total):
     degraded = simulate_sprayed(topo, flows, cfg=cfg,
                                 plane_skew=[1.0, 1.0, 1.0, math.inf])
     assert degraded.makespan_s >= healthy.makespan_s
+
+
+# -------------------------------------------------- flowlet switching ----
+
+from repro.sim.spray import flowlet_split  # noqa: E402
+
+fl_sizes_st = st.lists(st.integers(0, 1 << 21), min_size=1, max_size=32)
+fl_bytes_st = st.sampled_from([1, 4096, 1 << 17])
+
+
+@given(sizes=fl_sizes_st, n=planes_st, fl=fl_bytes_st,
+       seed=st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_flowlet_split_conserves_bytes_and_counts(sizes, n, fl, seed):
+    sizes = np.array(sizes, dtype=np.float64)
+    by, cnt = flowlet_split(sizes, n, fl, seed=seed)
+    assert by.shape == cnt.shape == (sizes.shape[0], n)
+    assert by.sum(axis=1) == pytest.approx(sizes)
+    assert (cnt.sum(axis=1) == np.ceil(sizes / fl)).all()
+    assert (by >= 0).all() and (cnt >= 0).all()
+
+
+@given(sizes=fl_sizes_st, n=st.integers(2, 8), seed=st.integers(0, 3),
+       dead=st.integers(0, 7))
+@settings(max_examples=40, deadline=None)
+def test_flowlet_dead_bucket_rehash_is_local(sizes, n, seed, dead):
+    """Killing one bucket only moves the flowlets that were ON it: every
+    surviving bucket's assignment is a superset of its healthy one."""
+    dead = dead % n
+    sizes = np.array(sizes, dtype=np.float64)
+    alive = np.ones(n, dtype=bool)
+    alive[dead] = False
+    healthy_b, healthy_c = flowlet_split(sizes, n, 4096, seed=seed)
+    degr_b, degr_c = flowlet_split(sizes, n, 4096, seed=seed, alive=alive)
+    assert degr_b[:, dead].sum() == 0 and degr_c[:, dead].sum() == 0
+    assert degr_b.sum(axis=1) == pytest.approx(sizes)
+    keep = alive.nonzero()[0]
+    assert (degr_c[:, keep] >= healthy_c[:, keep]).all()
+    assert (degr_b[:, keep] >= healthy_b[:, keep] - 1e-9).all()
+
+
+def test_flowlet_split_rejects_bad_args():
+    sizes = np.array([1024.0])
+    with pytest.raises(ValueError, match="flowlet_bytes"):
+        flowlet_split(sizes, 2, 0)
+    with pytest.raises(ValueError, match="n_buckets"):
+        flowlet_split(sizes, 0, 4096)
+    with pytest.raises(ValueError, match="alive"):
+        flowlet_split(sizes, 2, 4096, alive=np.ones(3, dtype=bool))
+    with pytest.raises(RuntimeError, match="all buckets down"):
+        flowlet_split(sizes, 2, 4096, alive=np.zeros(2, dtype=bool))
+
+
+def test_flowlet_split_zero_sized_flows():
+    by, cnt = flowlet_split(np.array([0.0, 0.0]), 4, 4096)
+    assert by.sum() == 0 and cnt.sum() == 0
+
+
+@given(total=st.integers(1 << 12, 1 << 22), dead=st.integers(0, 3))
+@settings(max_examples=10, deadline=None)
+def test_simulate_sprayed_flowlet_granularity(total, dead):
+    topo = MPHX(n=4, p=2, dims=(4,))
+    cfg = SprayConfig(n_planes=4, per_chunk_overhead_s=0.0)
+    skew = [1.0] * 4
+    skew[dead] = math.inf
+    flows = [FlowSpec(0, 1, total)]
+    res = simulate_sprayed(topo, flows, cfg=cfg, plane_skew=skew,
+                           granularity="flowlet", flowlet_bytes=4096)
+    assert res.per_plane_bytes.sum() == pytest.approx(total)
+    assert res.per_plane_bytes[0, dead] == 0.0
+    assert not res.stalled.any()
+    with pytest.raises(ValueError, match="granularity"):
+        simulate_sprayed(topo, flows, cfg=cfg, granularity="bogus")

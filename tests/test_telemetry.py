@@ -27,6 +27,7 @@ import shutil
 import numpy as np
 import pytest
 
+from repro.experiments.artifacts import SCHEMA_VERSION
 from repro.core.dragonfly import Dragonfly
 from repro.core.hyperx import MPHX
 from repro.core.netsim import make_router
@@ -413,7 +414,7 @@ def test_experiments_cli_trace_cosim_has_spans(tmp_path):
     # the artifacts written inside the recording scope carry the v5
     # telemetry block
     disk = json.loads(open(os.path.join(out, "cosim.json")).read())
-    assert disk["schema_version"] == 6
+    assert disk["schema_version"] == SCHEMA_VERSION
     assert disk["telemetry"]["counters"]["cosim.phases"] > 0
 
 
@@ -434,7 +435,7 @@ def test_bench_cli_trace_records_skips(tmp_path, capsys):
 
 
 def test_artifact_payload_telemetry_block():
-    from repro.experiments.artifacts import artifact_payload
+    from repro.experiments.artifacts import SCHEMA_VERSION, artifact_payload
 
     off = artifact_payload("table2", {}, [])
     assert "telemetry" not in off

@@ -11,6 +11,7 @@ closed-form KV-transfer FCT at 1e-6, and tag-driven attribution through
 import numpy as np
 import pytest
 
+from repro.experiments.artifacts import SCHEMA_VERSION
 from repro.core.hyperx import MPHX
 from repro.core.netsim import make_router, gbps_to_Bps
 from repro.cosim.placement import rank_to_switch
@@ -339,12 +340,12 @@ def test_serving_suite_artifact(tmp_path):
 
     p1 = run_serving_suite(str(tmp_path / "a"), seed=0, duration_ms=20.0)
     p2 = run_serving_suite(str(tmp_path / "b"), seed=0, duration_ms=20.0)
-    assert p1["schema_version"] == 6
+    assert p1["schema_version"] == SCHEMA_VERSION
     assert p1 == p2   # same seed, same payload
     assert (tmp_path / "a" / "serving.json").exists()
     assert (tmp_path / "a" / "serving.md").exists()
     disk = json.loads((tmp_path / "a" / "serving.json").read_text())
-    assert disk["schema_version"] == 6
+    assert disk["schema_version"] == SCHEMA_VERSION
     assert disk["suite"] == "serving"
     assert disk["params"]["seed"] == 0
     assert disk["params"]["n_skipped"] == 0
